@@ -1,0 +1,78 @@
+"""Fig 16 — ablation 2: shard-assignment optimality. Even split (upper
+bound) vs greedy (Algorithm 2) vs brute-force optimum (lower bound).
+
+Shards here are *ragged* (Algorithm 1 splits per tensor, leaving remainder
+shards), which is exactly where LPT develops its 0.5–29 % gap in the paper;
+with perfectly equal shards the greedy count allocation is provably optimal
+(our hypothesis tests check that case separately). Also reports the measured
+solver wall-time that justifies rejecting the MILP (§III-A)."""
+from __future__ import annotations
+
+import random
+import time
+
+import numpy as np
+
+from benchmarks.common import print_csv, save
+from repro.core.sharding_alg import (
+    NeighborLink,
+    brute_force_ragged,
+    greedy_ragged_assignment,
+    ragged_shards,
+)
+
+CASES = [(3, 2), (4, 3), (5, 3), (6, 4), (8, 3), (10, 4)]  # (n_tensors, n_neighbors)
+REPEATS = 30
+
+
+def run():
+    rows = []
+    for n_tensors, n_nb in CASES:
+        gaps, even_gaps, solver_us = [], [], []
+        for r in range(REPEATS):
+            rng = random.Random(1000 * n_tensors + 17 * n_nb + r)
+            tensors = [rng.randint(1, 40) * 1024 * 1024 for _ in range(n_tensors)]
+            s = rng.choice([4, 8, 16]) * 1024 * 1024
+            shards = ragged_shards(tensors, s)
+            if len(shards) > 12:
+                shards = shards[:12]
+            nb = {i: NeighborLink(rng.uniform(0, 0.05),
+                                  1.0 / rng.uniform(1e7, 1.25e8),
+                                  rng.uniform(0, 0.3))
+                  for i in range(n_nb)}
+            t0 = time.perf_counter()
+            _, g = greedy_ragged_assignment(shards, nb)
+            solver_us.append((time.perf_counter() - t0) * 1e6)
+            opt = brute_force_ragged(shards, nb)
+            # even: round-robin of shards across neighbors
+            loads = {u: nb[u].prop_s + nb[u].sync_s for u in nb}
+            for j, sz in enumerate(shards):
+                u = sorted(nb)[j % n_nb]
+                loads[u] += sz * nb[u].trans_s_per_byte
+            ev = max(loads.values())
+            gaps.append(g / opt - 1.0)
+            even_gaps.append(ev / opt - 1.0)
+        rows.append({
+            "tensors": n_tensors, "neighbors": n_nb,
+            "greedy_gap_pct": round(100 * float(np.mean(gaps)), 2),
+            "greedy_gap_max_pct": round(100 * float(np.max(gaps)), 2),
+            "even_gap_pct": round(100 * float(np.mean(even_gaps)), 2),
+            "graham_bound_pct": round(100 * (1.0 / 3 - 1.0 / (3 * n_nb)), 2),
+            "solver_us": round(float(np.mean(solver_us)), 1),
+        })
+    save("fig16_assignment_ablation", rows)
+    return rows
+
+
+def main():
+    rows = run()
+    print_csv("Fig 16: assignment optimality gap (%), ragged shards", rows,
+              ["tensors", "neighbors", "greedy_gap_pct", "greedy_gap_max_pct",
+               "even_gap_pct", "graham_bound_pct", "solver_us"])
+    worst = max(r["greedy_gap_max_pct"] for r in rows)
+    print(f"derived: worst_greedy_gap={worst:.2f}% (paper: 0.5-29%), "
+          f"solver sub-millisecond")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Shared helpers for the paper-figure benchmarks.
+
+Model state sizes follow the paper §VI-A: CV models 178–528 MiB
+(ResNet101 / AlexNet / VGG11), GPT-2 468–3050 MiB, LoRA 1.7 MiB. Sizes are
+fp32 parameter bytes + Adam moments where the paper replicates "model weights
+and optimizer states" (×3 of param bytes).
+"""
+from __future__ import annotations
+
+import json
+import random
+from pathlib import Path
+
+from repro.core.baselines import make_cluster, run_scale_out
+from repro.core.topology import Link, Topology, random_edge_topology
+
+MiB = 1024 * 1024
+
+# Paper model profiles: (name, training-state bytes, typical tensor size).
+CV_MODELS = [
+    ("resnet101", 178 * MiB, 2 * MiB),
+    ("alexnet", 233 * MiB, 8 * MiB),
+    ("vgg11", 507 * MiB, 16 * MiB),
+]
+GPT2_MODELS = [
+    ("gpt2", 468 * MiB, 4 * MiB),
+    ("gpt2-medium", 1355 * MiB, 8 * MiB),
+    ("gpt2-large", 3050 * MiB, 16 * MiB),
+]
+LORA_MODEL = ("gpt2-lora", int(1.7 * MiB), 64 * 1024)
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+
+def tensor_sizes_for(state_bytes: int, typ: int):
+    n = max(4, state_bytes // typ)
+    sizes = [typ] * n
+    rest = state_bytes - typ * n
+    if rest > 0:
+        sizes.append(rest)
+    return sizes
+
+
+def join_links(topo: Topology, new_node: int, n_links: int, seed: int):
+    rng = random.Random(seed)
+    peers = rng.sample(sorted(topo.active_nodes()),
+                       min(n_links, len(topo.active_nodes())))
+    return {p: Link(rng.uniform(100, 1000), rng.uniform(0.001, 0.02))
+            for p in peers}
+
+
+def measure_scale_out(strategy: str, n_nodes: int, state_bytes: int,
+                      tensor_sizes, seed: int = 0, train_iters: int = 2,
+                      n_links: int = 3, degree: int = 3):
+    topo = random_edge_topology(n_nodes, seed=seed, degree=degree)
+    cl = make_cluster(topo, state_bytes=state_bytes,
+                      tensor_sizes=tensor_sizes, strategy=strategy)
+    cl.train(train_iters)
+    new = 1000 + seed
+    links = join_links(topo, new, n_links, seed + 7)
+    delay, idle, extra = run_scale_out(cl, strategy, new, links, state_bytes)
+    return {"delay_s": delay, "idle_total_s": sum(idle.values()),
+            "idle_nodes": len(idle)}
+
+
+def save(name: str, rows):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / f"{name}.json").write_text(json.dumps(rows, indent=1))
+
+
+def print_csv(name: str, rows, cols):
+    print(f"\n# {name}")
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r.get(c, "")) for c in cols))

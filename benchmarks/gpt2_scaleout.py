@@ -1,0 +1,38 @@
+"""Fig 8 — Chaos scale-out delay on GPT-2 S/M/L vs cluster size:
+delay grows ~linearly with model size, stays flat as the cluster grows."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import GPT2_MODELS, measure_scale_out, print_csv, save, tensor_sizes_for
+
+CLUSTER_SIZES = (6, 8, 10, 12)
+REPEATS = 4
+
+
+def run():
+    rows = []
+    for model, state, typ in GPT2_MODELS:
+        sizes = tensor_sizes_for(state, typ)
+        for n in CLUSTER_SIZES:
+            ds = [measure_scale_out("chaos", n, state, sizes, seed=r)["delay_s"]
+                  for r in range(REPEATS)]
+            rows.append({"model": model, "cluster": n,
+                         "delay_s": round(float(np.mean(ds)), 3),
+                         "delay_std": round(float(np.std(ds)), 3)})
+    save("fig8_gpt2_scaleout", rows)
+    return rows
+
+
+def main():
+    rows = run()
+    print_csv("Fig 8: Chaos GPT-2 scale-out delay (s)", rows,
+              ["model", "cluster", "delay_s", "delay_std"])
+    small = np.mean([r["delay_s"] for r in rows if r["model"] == "gpt2"])
+    large = np.mean([r["delay_s"] for r in rows if r["model"] == "gpt2-large"])
+    print(f"derived: size_scaling={large/small:.2f}x for 6.5x state "
+          f"(sub-linear w.r.t. cluster growth expected)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""§Roofline report — renders the per-(arch × shape × mesh) three-term
+roofline table from the dry-run artifacts (benchmarks/results/dryrun.json)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import RESULTS, print_csv, save
+
+
+def load():
+    p = RESULTS / "dryrun.json"
+    if not p.exists():
+        return {}
+    return json.loads(p.read_text())
+
+
+def run():
+    d = load()
+    rows = []
+    for key in sorted(d):
+        v = d[key]
+        arch, shape, mesh = key.split("|")
+        if v.get("skipped"):
+            rows.append({"arch": arch, "shape": shape, "mesh": mesh,
+                         "status": "skipped", "note": v.get("reason", "")})
+            continue
+        if "roofline" not in v:
+            rows.append({"arch": arch, "shape": shape, "mesh": mesh,
+                         "status": "error", "note": v.get("error", "")[:60]})
+            continue
+        r = v["roofline"]
+        rows.append({
+            "arch": arch, "shape": shape, "mesh": mesh, "status": "ok",
+            "compute_s": round(r["compute_s"], 4),
+            "memory_s": round(r["memory_s"], 4),
+            "collective_s": round(r["collective_s"], 4),
+            "dominant": r["dominant"],
+            "useful_flops_ratio": round(r["useful_flops_ratio"], 3)
+            if r.get("useful_flops_ratio") else None,
+            "roofline_fraction": round(
+                r["compute_s"] / max(r["compute_s"], r["memory_s"],
+                                     r["collective_s"], 1e-12), 4),
+        })
+    save("roofline_report", rows)
+    return rows
+
+
+def main():
+    rows = run()
+    ok = [r for r in rows if r["status"] == "ok"]
+    print_csv("Roofline (per chip-second terms, v5e constants)", ok,
+              ["arch", "shape", "mesh", "compute_s", "memory_s",
+               "collective_s", "dominant", "useful_flops_ratio",
+               "roofline_fraction"])
+    skipped = [r for r in rows if r["status"] == "skipped"]
+    errors = [r for r in rows if r["status"] == "error"]
+    print(f"derived: cells_ok={len(ok)} skipped={len(skipped)} errors={len(errors)}")
+    if errors:
+        for e in errors:
+            print("  ERROR", e)
+
+
+if __name__ == "__main__":
+    main()

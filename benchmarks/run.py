@@ -1,0 +1,41 @@
+"""Benchmark orchestrator — one harness per paper table/figure (task spec §d)
+plus the roofline report. ``PYTHONPATH=src python -m benchmarks.run``"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+BENCHMARKS = [
+    ("fig3_components", "benchmarks.components"),
+    ("fig7_scaleout_delay", "benchmarks.scaleout_delay"),
+    ("fig8_gpt2_scaleout", "benchmarks.gpt2_scaleout"),
+    ("fig9_link_events", "benchmarks.link_events"),
+    ("fig10_idle_time", "benchmarks.idle_time"),
+    ("fig11_14_convergence", "benchmarks.convergence"),
+    ("fig15_replication_ablation", "benchmarks.replication_ablation"),
+    ("fig16_assignment_ablation", "benchmarks.assignment_ablation"),
+    ("roofline_report", "benchmarks.roofline_report"),
+]
+
+
+def main() -> int:
+    failures = 0
+    for name, module in BENCHMARKS:
+        print(f"\n{'='*72}\n== {name} ({module})\n{'='*72}")
+        t0 = time.time()
+        try:
+            mod = __import__(module, fromlist=["main"])
+            mod.main()
+            print(f"[{name}] ok in {time.time()-t0:.1f}s")
+        except Exception:
+            failures += 1
+            print(f"[{name}] FAILED:")
+            traceback.print_exc()
+    print(f"\n{'='*72}\nbenchmarks: {len(BENCHMARKS) - failures}/{len(BENCHMARKS)} ok")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

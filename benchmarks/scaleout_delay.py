@@ -1,0 +1,44 @@
+"""Fig 7 — scale-out delay: Pollux vs EDL+ vs Autoscaling vs Chaos,
+CV models, clusters growing 6→12 nodes, 4 repeats each."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import CV_MODELS, measure_scale_out, print_csv, save, tensor_sizes_for
+
+STRATEGIES = [("pollux", "Pollux"), ("single-source", "EDL+"),
+              ("multi-source", "Autoscaling"), ("chaos", "Chaos")]
+CLUSTER_SIZES = (6, 8, 10, 12)
+REPEATS = 4
+
+
+def run():
+    rows = []
+    for model, state, typ in CV_MODELS:
+        sizes = tensor_sizes_for(state, typ)
+        for n in CLUSTER_SIZES:
+            for strat, label in STRATEGIES:
+                ds = [measure_scale_out(strat, n, state, sizes, seed=r)["delay_s"]
+                      for r in range(REPEATS)]
+                rows.append({
+                    "model": model, "cluster": f"{n} to {n+1}", "system": label,
+                    "delay_s": round(float(np.mean(ds)), 3),
+                    "delay_std": round(float(np.std(ds)), 3),
+                })
+    save("fig7_scaleout_delay", rows)
+    return rows
+
+
+def main():
+    rows = run()
+    print_csv("Fig 7: scale-out delay (s)", rows,
+              ["model", "cluster", "system", "delay_s", "delay_std"])
+    # Paper claims: Pollux > 100 s; Chaos ≈ 1 s and flat/decreasing in size.
+    chaos = [r for r in rows if r["system"] == "Chaos"]
+    pollux = [r for r in rows if r["system"] == "Pollux"]
+    print(f"derived: chaos_mean={np.mean([r['delay_s'] for r in chaos]):.2f}s "
+          f"pollux_mean={np.mean([r['delay_s'] for r in pollux]):.2f}s")
+
+
+if __name__ == "__main__":
+    main()

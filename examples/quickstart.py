@@ -1,0 +1,58 @@
+"""Quickstart: train a tiny LM with the repro framework on one device.
+
+    PYTHONPATH=src python examples/quickstart.py [--arch tinyllama-1.1b]
+
+Uses the reduced config of the chosen architecture so it runs on a laptop in
+seconds; the full configs are exercised by the multi-pod dry-run
+(src/repro/launch/dryrun.py).
+"""
+import argparse
+import sys
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ShapeCell
+from repro.data.synthetic import TokenStream
+from repro.models import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+
+    import dataclasses
+    cfg = dataclasses.replace(get_config(args.arch).reduced(), learning_rate=args.lr)
+    model = build_model(cfg)
+    state = model.init_train_state(jax.random.PRNGKey(0))
+    step = jax.jit(model.make_train_step())
+    stream = TokenStream(vocab=cfg.vocab, seq_len=args.seq, seed=0)
+    cell = ShapeCell("quickstart", args.seq, args.batch, "train")
+
+    losses = []
+    for i in range(args.steps):
+        tokens = stream.batch(range(i * args.batch, (i + 1) * args.batch))
+        batch = {"tokens": tokens}
+        if cfg.family == "vlm":
+            batch["patches"] = np.zeros((args.batch, cfg.n_patches, cfg.d_model), np.float32)
+        if cfg.family == "encdec":
+            batch["frames"] = np.zeros((args.batch, cfg.enc_len, cfg.d_model), np.float32)
+        state, metrics = step(state, batch)
+        losses.append(metrics["loss"])
+        if i % 5 == 0 or i == args.steps - 1:
+            print(f"step {i:3d}  loss {float(metrics['loss']):.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):.3f}")
+
+    first, last = float(losses[0]), float(np.mean([float(l) for l in losses[-5:]]))
+    print(f"loss {first:.4f} -> {last:.4f} ({'improved' if last < first else 'FAILED'})")
+    return 0 if last < first else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

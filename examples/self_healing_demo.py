@@ -1,0 +1,89 @@
+"""Self-healing demo: node failure → sub-second in-memory recovery.
+
+Two recovery tiers (DESIGN.md §7):
+  1. MemoryReplicaStore — Chaos-planned state shards pushed to neighbors
+     every few steps; on failure the replacement pulls them back (no disk).
+  2. AsyncCheckpointer — background-thread disk checkpoints for correlated
+     failures; cold restore shown at the end.
+
+    PYTHONPATH=src python examples/self_healing_demo.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import sys
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import AsyncCheckpointer, MemoryReplicaStore
+from repro.configs import get_config
+from repro.core.sharding_alg import NeighborLink
+from repro.data.synthetic import TokenStream
+from repro.elastic import ElasticTrainer
+from repro.models import build_model
+
+SEQ = 64
+REPLICA_EVERY = 5
+
+
+def main():
+    cfg = get_config("gpt2").reduced()
+    model = build_model(cfg)
+    stream = TokenStream(vocab=cfg.vocab, seq_len=SEQ, seed=0)
+    trainer = ElasticTrainer(model, initial=3, per_device_batch=2)
+    trainer.init()
+
+    store = MemoryReplicaStore(redundancy=2)
+    nbrs = {1: NeighborLink(0.001, 1e-9), 2: NeighborLink(0.001, 2e-9),
+            3: NeighborLink(0.002, 1e-9)}
+    ckpt_dir = tempfile.mkdtemp(prefix="chaos_ckpt_")
+    ckpt = AsyncCheckpointer(ckpt_dir, keep=2)
+
+    def batch():
+        toks = stream.batch(range(trainer.step_count * trainer.global_batch,
+                                  (trainer.step_count + 1) * trainer.global_batch))
+        return {"tokens": toks}
+
+    for i in range(12):
+        m = trainer.step(batch())
+        if i % REPLICA_EVERY == 0:
+            t0 = time.perf_counter()
+            store.push(owner=0, step=trainer.step_count, tree=trainer.state,
+                       neighbors=nbrs)
+            ckpt.save(trainer.step_count, trainer.state)
+            print(f"step {trainer.step_count}: loss {m['loss']:.4f} "
+                  f"(replicas+ckpt pushed in {(time.perf_counter()-t0)*1e3:.0f} ms)")
+
+    # ---- tier 1: node failure, in-memory restore ---------------------------------
+    print("\n--- injecting node failure ---")
+    trainer.scale_in(failure=True)
+    store.drop_holder(1)  # one replica holder died too
+    t0 = time.perf_counter()
+    restored, step = store.restore(0, available=[2, 3])
+    restore_ms = (time.perf_counter() - t0) * 1e3
+    trainer.state = jax.device_put(restored, trainer._state_sharding())
+    print(f"in-memory restore of step-{step} state in {restore_ms:.1f} ms "
+          f"(survived holder loss via redundancy=2)")
+    m = trainer.step(batch())
+    print(f"training continues: loss {m['loss']:.4f}")
+
+    # ---- tier 2: cold restore from disk -------------------------------------------
+    ckpt.wait()
+    skeleton = jax.tree.map(lambda x: np.zeros(x.shape, x.dtype),
+                            jax.tree.map(np.asarray, trainer.state))
+    cold, cold_step = ckpt.restore_latest(skeleton)
+    print(f"cold tier: latest disk checkpoint is step {cold_step} "
+          f"({'present' if cold is not None else 'MISSING'})")
+    ckpt.close()
+
+    ok = cold is not None and np.isfinite(m["loss"])
+    print("SELF_HEALING_OK" if ok else "SELF_HEALING_FAILED")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,74 @@
+"""Serving demo: batched prefill + decode with KV caches.
+
+Serves the reduced tinyllama config: prefill a batch of prompts, then decode
+tokens autoregressively. The same prefill/decode_step functions are what the
+dry-run lowers at (arch × decode_32k / long_500k / prefill_32k) scale.
+
+    PYTHONPATH=src python examples/serve.py [--arch tinyllama-1.1b] [--tokens 16]
+"""
+import argparse
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    if cfg.family in ("encdec",):
+        print("serve demo targets decoder-only archs; pick another --arch")
+        return 1
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    B, S = args.batch, args.prompt_len
+    total = S + args.tokens
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+
+    # Prefill with a cache sized for the full generation.
+    if cfg.family in ("dense", "moe", "vlm"):
+        from repro.models import transformer
+
+        prefix = cfg.n_patches if cfg.family == "vlm" else 0
+        cache = transformer.make_cache(cfg, B, total, prefix=prefix)
+        kwargs = {}
+        if cfg.family == "vlm":
+            kwargs["patch_embeds"] = jnp.zeros((B, cfg.n_patches, cfg.d_model),
+                                               jnp.bfloat16)
+        logits, cache, _ = transformer.forward(
+            cfg, params, prompts, cache=cache,
+            cache_pos=jnp.zeros((), jnp.int32), **kwargs)
+    else:
+        logits, cache = model.prefill(params, {"tokens": prompts})
+
+    decode = jax.jit(lambda p, b: model.decode_step(p, b))
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    out_tokens = [tok]
+    for t in range(args.tokens - 1):
+        pos = jnp.asarray(S + t, jnp.int32)
+        logits, cache = decode(params, {"tokens": tok, "pos": pos, "cache": cache})
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out_tokens.append(tok)
+
+    gen = jnp.concatenate(out_tokens, axis=1)
+    print(f"arch={cfg.name} prefill={S} decode={args.tokens} batch={B}")
+    for b in range(B):
+        print(f"  seq{b}: {np.asarray(gen[b])[:12]} ...")
+    ok = bool(jnp.all(gen >= 0) and jnp.all(gen < cfg.vocab))
+    print("SERVE_OK" if ok else "SERVE_FAILED")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,9 @@
+from repro.checkpoint.async_ckpt import AsyncCheckpointer, load_checkpoint, save_checkpoint
+from repro.checkpoint.memory_ckpt import MemoryReplicaStore
+
+__all__ = [
+    "AsyncCheckpointer",
+    "save_checkpoint",
+    "load_checkpoint",
+    "MemoryReplicaStore",
+]

@@ -1,0 +1,101 @@
+"""In-memory neighbor-replicated checkpoints (Gemini [20] tier, built on the
+Chaos replication engine).
+
+Every node periodically pushes *shards* of its training state to k neighbors
+(planned by Algorithm 1/2 so pushes balance across links and overlap with
+compute). On node failure, the replacement node pulls the shards back from the
+surviving neighbors — sub-second restore, no disk in the loop. This is the
+fast tier of the self-healing stack; AsyncCheckpointer is the cold tier.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.replication import (
+    StateManifest,
+    assemble_shards,
+    extract_shards,
+    flatten_state,
+    make_shard_ranges,
+    unflatten_state,
+)
+from repro.core.sharding_alg import NeighborLink, binary_search_assignment
+
+
+@dataclass
+class ReplicaMeta:
+    step: int
+    manifest: StateManifest
+    ranges: list
+    holders: Dict[int, List[int]]  # neighbor -> shard indices held
+
+
+class MemoryReplicaStore:
+    """Holds replicated shard sets per (owner node, step)."""
+
+    def __init__(self, redundancy: int = 1):
+        self.redundancy = redundancy
+        self._shards: Dict[tuple, Dict[int, bytes]] = {}  # (owner, holder) -> shards
+        self._meta: Dict[int, ReplicaMeta] = {}
+
+    # -- owner side ---------------------------------------------------------
+
+    def push(self, owner: int, step: int, tree,
+             neighbors: Dict[int, NeighborLink]) -> ReplicaMeta:
+        """Shard the state and place shards on neighbors (Alg 1/2 balanced).
+        With redundancy r > 1, each shard goes to r distinct holders."""
+        buf, manifest = flatten_state(tree)
+        asg = binary_search_assignment(manifest.tensor_sizes, neighbors)
+        ranges = make_shard_ranges(manifest.total_bytes, asg.shard_size)
+        holders: Dict[int, List[int]] = {u: [] for u in neighbors}
+        order = sorted(neighbors)
+        for u, ks in asg.shards_per_neighbor.items():
+            ks = [k for k in ks if k < len(ranges)]
+            holder_ring = [u] + [v for v in order if v != u]
+            for r in range(self.redundancy):
+                h = holder_ring[r % len(holder_ring)]
+                shards = extract_shards(buf, [ranges[k] for k in ks])
+                key = (owner, h)
+                self._shards.setdefault(key, {}).update(shards)
+                holders.setdefault(h, []).extend(ks)
+        meta = ReplicaMeta(step, manifest, ranges, holders)
+        self._meta[owner] = meta
+        return meta
+
+    # -- recovery side --------------------------------------------------------
+
+    def restore(self, owner: int, *, available: Optional[Sequence[int]] = None):
+        """Reassemble the owner's state from surviving holders.
+        Returns (tree, step) or raises if shards are missing."""
+        meta = self._meta.get(owner)
+        if meta is None:
+            raise KeyError(f"no replica for node {owner}")
+        merged: Dict[int, bytes] = {}
+        for (own, holder), shards in self._shards.items():
+            if own != owner:
+                continue
+            if available is not None and holder not in available:
+                continue
+            merged.update(shards)
+        missing = {r.index for r in meta.ranges} - set(merged)
+        if missing:
+            raise RuntimeError(
+                f"replica incomplete: {len(missing)} shards lost "
+                f"(raise redundancy or fall back to disk checkpoint)")
+        buf = assemble_shards(merged, meta.ranges, meta.manifest.total_bytes)
+        return unflatten_state(buf, meta.manifest), meta.step
+
+    def drop_holder(self, holder: int):
+        """Simulate losing a holder node (its replica shards vanish)."""
+        for key in [k for k in self._shards if k[1] == holder]:
+            del self._shards[key]
+
+    def bytes_held(self, holder: int) -> int:
+        return sum(
+            sum(len(b) for b in shards.values())
+            for (own, h), shards in self._shards.items() if h == holder
+        )

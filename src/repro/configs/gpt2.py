@@ -1,0 +1,30 @@
+"""GPT-2 S/M/L — the paper's own text-pretraining models (§VI, Figs 8/13/14).
+
+Used by the replication benchmarks (state sizes match the paper: 468 MiB /
+1.4 GiB / 3.0 GiB fp32 orders) and by the LoRA fine-tuning convergence repro.
+"""
+from repro.configs.base import ArchConfig, register
+
+
+def _gpt2(name, n_layers, d_model, n_heads):
+    return register(
+        ArchConfig(
+            name=name,
+            family="dense",
+            n_layers=n_layers,
+            d_model=d_model,
+            n_heads=n_heads,
+            n_kv_heads=n_heads,
+            d_ff=4 * d_model,
+            vocab=50257,
+            norm="layernorm",
+            mlp="gelu2",
+            positions="learned",
+            tie_embeddings=True,
+        )
+    )
+
+
+GPT2_SMALL = _gpt2("gpt2", 12, 768, 12)
+GPT2_MEDIUM = _gpt2("gpt2-medium", 24, 1024, 16)
+GPT2_LARGE = _gpt2("gpt2-large", 36, 1280, 20)

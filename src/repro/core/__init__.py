@@ -1,0 +1,45 @@
+"""Chaos core: the paper's contribution — multi-neighbor state replication
+with shard scheduling, cluster monitoring, and peer-negotiation autoscaling."""
+from repro.core.sharding_alg import (
+    Assignment,
+    NeighborLink,
+    binary_search_assignment,
+    brute_force_assignment,
+    chaos_plan,
+    even_assignment,
+    greedy_shard_assignment,
+    multi_source_plan,
+    single_source_plan,
+)
+from repro.core.topology import Link, Topology, random_edge_topology, pod_topology
+from repro.core.negotiation import ChaosScheduler, SimCluster
+from repro.core.replication import (
+    build_manifest,
+    execute_replication,
+    flatten_state,
+    plan_replication,
+    unflatten_state,
+)
+
+__all__ = [
+    "Assignment",
+    "NeighborLink",
+    "binary_search_assignment",
+    "brute_force_assignment",
+    "chaos_plan",
+    "even_assignment",
+    "greedy_shard_assignment",
+    "multi_source_plan",
+    "single_source_plan",
+    "Link",
+    "Topology",
+    "random_edge_topology",
+    "pod_topology",
+    "ChaosScheduler",
+    "SimCluster",
+    "build_manifest",
+    "execute_replication",
+    "flatten_state",
+    "plan_replication",
+    "unflatten_state",
+]

@@ -1,0 +1,117 @@
+"""Cluster monitor (paper §IV-A): overlay-topology tracking, node/link event
+detection (control messages, heartbeats, probes), and on-demand network
+resource measurement. Runs inside the discrete-event simulator; on a real
+deployment the same interface is backed by host agents + iperf probes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.simulator import Network, Sim
+from repro.core.topology import Link, Topology
+
+HEARTBEAT_PERIOD_S = 2.0
+HEARTBEAT_TIMEOUT_S = 6.0
+PROBE_FAILURES_FOR_LINK_DOWN = 2
+MEASURE_SECONDS = 0.5  # iperf-style bandwidth probe duration per link
+
+
+@dataclass
+class EventRecord:
+    t: float
+    kind: str  # join | leave | node-failure | link-join | link-leave | link-failure
+    subject: Tuple
+    detail: str = ""
+
+
+class ClusterMonitor:
+    """Tracks node state, heartbeats, link probes, and network resources."""
+
+    def __init__(self, sim: Sim, net: Network, topo: Topology):
+        self.sim = sim
+        self.net = net
+        self.topo = topo
+        self.last_heartbeat: Dict[int, float] = {}
+        self.events: List[EventRecord] = []
+        self.on_node_failure: Optional[Callable[[int], None]] = None
+        self.on_link_failure: Optional[Callable[[int, int], None]] = None
+        self._probe_failures: Dict[Tuple[int, int], int] = {}
+
+    # -- topology bookkeeping -------------------------------------------------
+
+    def record(self, kind: str, subject, detail: str = ""):
+        self.events.append(EventRecord(self.sim.now, kind, tuple(subject) if
+                                       isinstance(subject, (list, tuple)) else (subject,),
+                                       detail))
+
+    def register_join(self, node_id: int, links: Dict[int, Link], compute_s=1.0):
+        info = self.topo.add_node(node_id, compute_s=compute_s)
+        info.state = "standby"
+        info.join_time = self.sim.now
+        for peer, link in links.items():
+            self.topo.add_link(node_id, peer, link)
+        self.last_heartbeat[node_id] = self.sim.now
+        self.record("join", node_id)
+        return info
+
+    def activate(self, node_id: int):
+        self.topo.nodes[node_id].state = "active"
+
+    def register_leave(self, node_id: int, failure: bool = False):
+        if node_id in self.topo.nodes:
+            self.topo.nodes[node_id].state = "failed" if failure else "left"
+            self.topo.g.remove_node(node_id)
+            self.topo.g.add_node(node_id)  # keep id known, no links
+        self.record("node-failure" if failure else "leave", node_id)
+
+    # -- heartbeats ------------------------------------------------------------
+
+    def heartbeat(self, node_id: int):
+        self.last_heartbeat[node_id] = self.sim.now
+
+    def check_heartbeats(self) -> List[int]:
+        """Returns nodes whose heartbeats have lapsed; triggers callbacks."""
+        dead = []
+        for n, t in list(self.last_heartbeat.items()):
+            info = self.topo.nodes.get(n)
+            if info is None or info.state != "active":
+                continue
+            if self.sim.now - t > HEARTBEAT_TIMEOUT_S:
+                dead.append(n)
+                self.record("node-failure", n, "heartbeat timeout")
+                if self.on_node_failure:
+                    self.on_node_failure(n)
+        return dead
+
+    # -- link probes -------------------------------------------------------------
+
+    def probe_link(self, u: int, v: int, ok: bool = True):
+        key = (min(u, v), max(u, v))
+        if ok:
+            self._probe_failures.pop(key, None)
+            return False
+        c = self._probe_failures.get(key, 0) + 1
+        self._probe_failures[key] = c
+        if c >= PROBE_FAILURES_FOR_LINK_DOWN:
+            self.record("link-failure", key)
+            if self.on_link_failure:
+                self.on_link_failure(u, v)
+            return True
+        return False
+
+    # -- resource measurement ------------------------------------------------------
+
+    def measure_links(self, node: int, peers: List[int]) -> Tuple[Dict[int, Tuple[float, float]], float]:
+        """iperf-style measurement of (prop_s, trans_s_per_byte) to each peer.
+
+        Returns (measurements, wall_seconds). Probes run in parallel across
+        peers (each occupies its own link), so wall time ≈ one probe.
+        Chaos measures only on scale-out / connect-link (§IV-A).
+        """
+        out = {}
+        for p in peers:
+            l = self.topo.link(node, p)
+            out[p] = (l.latency_s, l.trans_delay_per_byte)
+        return out, MEASURE_SECONDS

@@ -1,0 +1,273 @@
+"""Peer-negotiation protocols (paper §IV-B, Fig 4) + the SimCluster facade.
+
+The scheduler coordinates scale-out, scale-in, connect-link and
+disconnect-link through control messages over the simulated network; state
+replication transfers ride the same network with per-link FIFO contention.
+Following §IV-C, negotiation/measurement overlap with all-reduce and state
+replication overlaps with gradient computation — the *reported* delay of each
+primitive is its non-hidden (blocking) portion, which is what the paper's
+Table I / Fig 9 measure.
+"""
+from __future__ import annotations
+
+import time as _time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.monitor import ClusterMonitor, MEASURE_SECONDS
+from repro.core.simulator import CONTROL_MSG_BYTES, Network, Sim, TrainingSession
+from repro.core.sharding_alg import (
+    NeighborLink,
+    ReplicationPlan,
+    binary_search_assignment,
+    chaos_even_plan,
+    chaos_plan,
+    multi_source_plan,
+    single_source_plan,
+)
+from repro.core.topology import Link, Topology
+
+POLICY_SWAP_S = 50e-6  # local pointer swap installing a new sync policy
+SOCKET_SETUP_S = 120e-6  # local socket setup/teardown cost
+
+
+@dataclass
+class ScaleOutResult:
+    delay_s: float  # join request → node ready to train (§VI-B)
+    replication_s: float  # state transfer critical path
+    solver_s: float  # Alg 1+2 wall time (measured, on the critical path)
+    idle_s: Dict[int, float]  # per-node idle attributable to this event
+    plan: ReplicationPlan
+    timeline: Dict[str, float]
+
+
+@dataclass
+class PrimitiveResult:
+    delay_s: float  # blocking (non-overlapped) portion — Table I semantics
+    wall_s: float  # full protocol wall time incl. hidden parts
+    timeline: Dict[str, float]
+
+
+class ChaosScheduler:
+    """The scheduler: cluster monitor + peer negotiator + plan generator."""
+
+    def __init__(self, sim: Sim, net: Network, topo: Topology,
+                 session: TrainingSession, *, scheduler_node: int,
+                 strategy: str = "chaos"):
+        self.sim = sim
+        self.net = net
+        self.topo = topo
+        self.session = session
+        self.node = scheduler_node
+        self.strategy = strategy
+        self.monitor = ClusterMonitor(sim, net, topo)
+        self.monitor.on_node_failure = lambda n: self.scale_in(n, failure=True)
+        self.monitor.on_link_failure = lambda u, v: self.disconnect_link(u, v, failure=True)
+        self.sync_policy_version = 0
+
+    # -- helpers ---------------------------------------------------------------
+
+    def _control_rtt(self, u: int, v: int) -> float:
+        if u == v:
+            return 2e-6
+        if self.topo.has_link(u, v):
+            return 2 * self.topo.link(u, v).latency_s
+        path = self.topo.shortest_path(u, v, CONTROL_MSG_BYTES)
+        prop, _ = self.topo.path_delay_per_byte(path)
+        return 2 * prop
+
+    def _update_sync_policy(self):
+        """Model-synchronization policy regeneration (all-reduce schedule —
+        e.g. NetStorm FAPT over the new overlay). Local swap cost only."""
+        self.sync_policy_version += 1
+        return POLICY_SWAP_S
+
+    # -- scale-out (Fig 4a / Fig 5a) --------------------------------------------
+
+    def scale_out(self, new_node: int, links: Dict[int, Link],
+                  state_bytes: int, tensor_sizes: Sequence[int],
+                  compute_s: float = 1.0) -> ScaleOutResult:
+        t0 = self.sim.now
+        timeline = {"request": t0}
+
+        # 1. Join request reaches the scheduler (over the best of its links).
+        self.monitor.register_join(new_node, links, compute_s=compute_s)
+        req_delay = min(l.latency_s for l in links.values()) if links else 0.0
+        t = t0 + req_delay
+
+        # 2. Peer negotiation: scheduler instructs neighbors; sockets open.
+        neighbor_ids = list(links)
+        nego = max((self._control_rtt(self.node, u) for u in neighbor_ids),
+                   default=0.0) + SOCKET_SETUP_S
+        t_sockets = t + nego
+        timeline["sockets_up"] = t_sockets
+
+        # 3. Monitor measures links (parallel iperf probes) — overlaps with
+        #    the in-flight all-reduce (§IV-C).
+        meas, meas_wall = self.monitor.measure_links(new_node, neighbor_ids)
+        t_measured = t_sockets + meas_wall
+        timeline["measured"] = t_measured
+
+        # 4. All-reduce boundary: replication starts after the current
+        #    all-reduce completes for each neighbor (τ^sync skew).
+        ar_done = {u: self.session.events.allreduce_done.get(u, t_measured)
+                   for u in neighbor_ids}
+        sync = {u: max(0.0, ar_done[u] - t_measured) + self.session.node_sync_skew(u)
+                for u in neighbor_ids}
+
+        # 5. Plan generation (Algorithm 1 + 2) — wall time measured for real.
+        wall0 = _time.perf_counter()
+        plan = self._make_plan(new_node, state_bytes, tensor_sizes, sync)
+        solver_s = _time.perf_counter() - wall0
+        t_plan = t_measured + solver_s
+        timeline["plan_ready"] = t_plan
+
+        # 6. Policies distributed; shard transfers ride the data network.
+        policy_dist = max((self._control_rtt(self.node, u) / 2
+                           for u in list(plan.sources) + [new_node]), default=0.0)
+        t_transfers_start = t_plan + policy_dist
+
+        done_at = {"t": t_transfers_start}
+
+        def mk_done(u):
+            def cb(tdone):
+                done_at["t"] = max(done_at["t"], tdone)
+            return cb
+
+        # Schedule transfers at their per-source start times.
+        for u, nbytes in plan.sources.items():
+            route = plan.routes[u]
+            start = t_transfers_start + sync.get(u, 0.0)
+            self.sim.at(start, lambda u=u, nbytes=nbytes, route=route:
+                        self.net.transfer(route, nbytes, mk_done(u)))
+        self.sim.run()  # drain the scheduled transfers
+        t_state_done = done_at["t"]
+        timeline["state_replicated"] = t_state_done
+
+        # 7. New node installs state + policy, joins the next iteration.
+        t_ready = t_state_done + self._update_sync_policy()
+        timeline["ready"] = t_ready
+        self.monitor.activate(new_node)
+
+        delay = t_ready - t0
+        idle = self._idle_for_scaleout(plan, t0, t_ready, neighbor_ids)
+        return ScaleOutResult(delay, t_state_done - t_transfers_start, solver_s,
+                              idle, plan, timeline)
+
+    def _make_plan(self, new_node, state_bytes, tensor_sizes, sync) -> ReplicationPlan:
+        if self.strategy == "chaos":
+            return chaos_plan(self.topo, new_node, state_bytes, tensor_sizes, sync)
+        if self.strategy == "chaos-even":
+            return chaos_even_plan(self.topo, new_node, state_bytes, tensor_sizes, sync)
+        if self.strategy == "single-source":
+            return single_source_plan(self.topo, new_node, state_bytes, sync)
+        if self.strategy == "multi-source":
+            return multi_source_plan(self.topo, new_node, state_bytes, sync)
+        raise ValueError(self.strategy)
+
+    def _idle_for_scaleout(self, plan, t0, t_ready, neighbors) -> Dict[int, float]:
+        """Idle attribution per §VI-C:
+        * chaos: only replication sources pause training while serving shards
+          (their next compute window shrinks); others keep training.
+        * single-source (EDL+ barrier): every node waits for replication.
+        * multi-source: every node both serves and waits.
+        """
+        window = t_ready - t0
+        idle = {}
+        active = [n for n in self.topo.active_nodes()]
+        if self.strategy in ("chaos", "chaos-even"):
+            for u in plan.sources:
+                nbytes = plan.sources[u]
+                l = self.topo.link(u, plan.routes[u][1]) if len(plan.routes[u]) > 1 else None
+                serve = nbytes * l.trans_delay_per_byte if l else 0.0
+                # Serving overlaps with compute; idle is the non-hidden tail.
+                hide = self.topo.nodes[u].compute_s
+                idle[u] = max(0.0, serve - hide)
+        elif self.strategy == "single-source":
+            for u in active:
+                idle[u] = window  # extra barrier in EDL+ blocks everyone
+        elif self.strategy == "multi-source":
+            for u in active:
+                idle[u] = window
+        return idle
+
+    # -- scale-in (Fig 4b) -------------------------------------------------------
+
+    def scale_in(self, node: int, failure: bool = False) -> PrimitiveResult:
+        t0 = self.sim.now
+        timeline = {"request": t0}
+        # Control exchange (leave request / failure detection) is overlapped
+        # with training; the blocking part is socket teardown + policy swap.
+        wall = self._control_rtt(self.node, node) if not failure else 0.0
+        self.monitor.register_leave(node, failure=failure)
+        blocking = SOCKET_SETUP_S + self._update_sync_policy()
+        if failure:
+            # Failure mid-all-reduce → all-reduce restart for this iteration
+            # (blocking portion stays sub-ms; the restarted all-reduce is
+            # charged to the training loop, not the primitive).
+            timeline["allreduce_restart"] = t0 + blocking
+        timeline["done"] = t0 + blocking
+        return PrimitiveResult(blocking, wall + blocking, timeline)
+
+    # -- connect-link (Fig 4c / 5b) -----------------------------------------------
+
+    def connect_link(self, u: int, v: int, link: Link) -> PrimitiveResult:
+        t0 = self.sim.now
+        self.topo.add_link(u, v, link)
+        # Socket setup + measurement overlap with all-reduce + gradient
+        # compute (§IV-C Fig 5b) — fully hidden; blocking part = policy swap.
+        wall = self._control_rtt(self.node, u) + SOCKET_SETUP_S + MEASURE_SECONDS
+        blocking = SOCKET_SETUP_S + self._update_sync_policy()
+        self.monitor.record("link-join", (u, v))
+        return PrimitiveResult(blocking, wall + blocking, {"request": t0,
+                                                           "done": t0 + blocking})
+
+    # -- disconnect-link (Fig 4d) ----------------------------------------------------
+
+    def disconnect_link(self, u: int, v: int, failure: bool = False) -> PrimitiveResult:
+        t0 = self.sim.now
+        self.topo.remove_link(u, v)
+        wall = 0.0 if failure else self._control_rtt(self.node, u)
+        blocking = SOCKET_SETUP_S + self._update_sync_policy()
+        self.monitor.record("link-failure" if failure else "link-leave", (u, v))
+        return PrimitiveResult(blocking, wall + blocking, {"request": t0,
+                                                           "done": t0 + blocking})
+
+
+# ---------------------------------------------------------------------------
+# Facade used by benchmarks and tests.
+# ---------------------------------------------------------------------------
+
+
+class SimCluster:
+    """An elastic synchronous-training cluster under one scaling strategy."""
+
+    def __init__(self, topo: Topology, *, state_bytes: int,
+                 tensor_sizes: Sequence[int], strategy: str = "chaos",
+                 scheduler_node: Optional[int] = None):
+        self.sim = Sim()
+        self.topo = topo
+        self.net = Network(self.sim, topo)
+        self.session = TrainingSession(self.sim, self.net, topo, state_bytes)
+        self.state_bytes = state_bytes
+        self.tensor_sizes = list(tensor_sizes)
+        sched = scheduler_node if scheduler_node is not None else min(topo.active_nodes())
+        self.scheduler = ChaosScheduler(self.sim, self.net, topo, self.session,
+                                        scheduler_node=sched, strategy=strategy)
+
+    def train(self, iterations: int = 1):
+        self.session.run_iterations(iterations)
+
+    def scale_out(self, new_node: int, links: Dict[int, Link],
+                  compute_s: float = 1.0) -> ScaleOutResult:
+        return self.scheduler.scale_out(new_node, links, self.state_bytes,
+                                        self.tensor_sizes, compute_s=compute_s)
+
+    def scale_in(self, node: int, failure: bool = False) -> PrimitiveResult:
+        return self.scheduler.scale_in(node, failure=failure)
+
+    def connect_link(self, u: int, v: int, link: Link) -> PrimitiveResult:
+        return self.scheduler.connect_link(u, v, link)
+
+    def disconnect_link(self, u: int, v: int, failure=False) -> PrimitiveResult:
+        return self.scheduler.disconnect_link(u, v, failure=failure)

@@ -1,0 +1,175 @@
+"""State-replication engine: training-state pytree ⇄ byte shards.
+
+The paper replicates "model weights, optimizer states, and runtime info"
+(§III, Fig 3). Here a JAX training-state pytree is flattened to a contiguous
+byte view with a manifest; Algorithm 1/2 plans over the byte sizes; shards are
+materialized (optionally int8-compressed), shipped (simulated or real), and
+reassembled into an identical pytree on the joining node.
+
+``plan_for_sharded_state`` handles TP/EP-sharded states (DESIGN.md §5): only
+same-shard-rank neighbors are valid sources, so planning runs per rank group.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.sharding_alg import (
+    Assignment,
+    NeighborLink,
+    binary_search_assignment,
+)
+
+
+@dataclass(frozen=True)
+class TensorEntry:
+    path: str
+    shape: Tuple[int, ...]
+    dtype: str
+    offset: int  # byte offset in the flat stream
+    nbytes: int
+
+
+@dataclass
+class StateManifest:
+    entries: List[TensorEntry]
+    total_bytes: int
+    treedef: object = None
+
+    @property
+    def tensor_sizes(self) -> List[int]:
+        return [e.nbytes for e in self.entries]
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def build_manifest(tree) -> StateManifest:
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    entries = []
+    off = 0
+    for path, leaf in leaves:
+        arr = np.asarray(leaf)
+        e = TensorEntry(_path_str(path), arr.shape, str(arr.dtype), off, arr.nbytes)
+        entries.append(e)
+        off += arr.nbytes
+    return StateManifest(entries, off, jax.tree_util.tree_structure(tree))
+
+
+def flatten_state(tree) -> Tuple[np.ndarray, StateManifest]:
+    """Concatenate all leaves into one uint8 stream + manifest."""
+    manifest = build_manifest(tree)
+    buf = np.empty(manifest.total_bytes, np.uint8)
+    leaves = jax.tree_util.tree_leaves(tree)
+    for e, leaf in zip(manifest.entries, leaves):
+        arr = np.ascontiguousarray(np.asarray(leaf))
+        buf[e.offset : e.offset + e.nbytes] = arr.view(np.uint8).reshape(-1)
+    return buf, manifest
+
+
+def unflatten_state(buf: np.ndarray, manifest: StateManifest):
+    leaves = []
+    for e in manifest.entries:
+        raw = buf[e.offset : e.offset + e.nbytes]
+        leaves.append(raw.view(np.dtype(e.dtype)).reshape(e.shape))
+    return jax.tree_util.tree_unflatten(manifest.treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# Shards.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShardRange:
+    index: int
+    start: int
+    end: int
+
+    @property
+    def nbytes(self) -> int:
+        return self.end - self.start
+
+
+def make_shard_ranges(total_bytes: int, shard_size: int) -> List[ShardRange]:
+    out = []
+    i = 0
+    for start in range(0, total_bytes, shard_size):
+        out.append(ShardRange(i, start, min(start + shard_size, total_bytes)))
+        i += 1
+    return out
+
+
+def extract_shards(buf: np.ndarray, ranges: Sequence[ShardRange]) -> Dict[int, bytes]:
+    return {r.index: buf[r.start : r.end].tobytes() for r in ranges}
+
+
+def assemble_shards(shards: Dict[int, bytes], ranges: Sequence[ShardRange],
+                    total_bytes: int) -> np.ndarray:
+    buf = np.empty(total_bytes, np.uint8)
+    seen = 0
+    for r in ranges:
+        data = shards[r.index]
+        assert len(data) == r.nbytes, (r, len(data))
+        buf[r.start : r.end] = np.frombuffer(data, np.uint8)
+        seen += r.nbytes
+    assert seen == total_bytes
+    return buf
+
+
+# ---------------------------------------------------------------------------
+# End-to-end replication (used by the elastic runtime and tests).
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ReplicationExecution:
+    assignment: Assignment
+    ranges: List[ShardRange]
+    manifest: StateManifest
+    bytes_per_source: Dict[int, int]
+
+
+def plan_replication(tree, neighbors: Dict[int, NeighborLink]) -> ReplicationExecution:
+    """Plan shard pulls for a full training-state pytree (identical across
+    sources — synchronous DP, the paper's setting)."""
+    buf_manifest = build_manifest(tree)
+    asg = binary_search_assignment(buf_manifest.tensor_sizes, neighbors)
+    ranges = make_shard_ranges(buf_manifest.total_bytes, asg.shard_size)
+    per_source = {
+        u: sum(ranges[k].nbytes for k in ks if k < len(ranges))
+        for u, ks in asg.shards_per_neighbor.items()
+    }
+    return ReplicationExecution(asg, ranges, buf_manifest, per_source)
+
+
+def execute_replication(tree, plan: ReplicationExecution):
+    """Materialize shards per source and reassemble — the actual data path a
+    joining node runs; returns (reassembled_tree, shards_by_source)."""
+    buf, manifest = flatten_state(tree)
+    by_source: Dict[int, Dict[int, bytes]] = {}
+    for u, ks in plan.assignment.shards_per_neighbor.items():
+        rs = [plan.ranges[k] for k in ks if k < len(plan.ranges)]
+        by_source[u] = extract_shards(buf, rs)
+    merged: Dict[int, bytes] = {}
+    for shards in by_source.values():
+        merged.update(shards)
+    out = assemble_shards(merged, plan.ranges, manifest.total_bytes)
+    return unflatten_state(out, manifest), by_source
+
+
+def plan_for_sharded_state(
+    rank_of_neighbor: Dict[int, int],
+    my_rank_sources: Dict[int, NeighborLink],
+    tree,
+) -> ReplicationExecution:
+    """TP/EP-sharded training state: only neighbors holding the same shard
+    rank are valid sources. Callers pass the same-rank neighbor subset; this
+    is a thin wrapper documenting the grouping contract."""
+    assert my_rank_sources, "no same-rank neighbors — fall back to checkpoint tier"
+    return plan_replication(tree, my_rank_sources)

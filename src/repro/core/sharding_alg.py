@@ -1,0 +1,352 @@
+"""Shard-assignment algorithms for multi-neighbor state replication
+(paper §III — problems P1/P2/P3, Algorithms 1 and 2, and the ablation
+baselines of §VI-F).
+
+Objective (P1, Eq. 4):  min over (s, x)  of  max_u  t_u + τ_u^sync,
+  t_u = t_u^prop + s · t_u^trans · |K_u|.
+
+* ``greedy_shard_assignment``  — Algorithm 2 (least-estimated-load greedy ==
+  LPT for P∥C_max; Graham bound (4/3 − 1/(3|U|))·OPT).
+* ``binary_search_assignment`` — Algorithm 1 (binary search over shard size s,
+  calling Algorithm 2 per candidate; quasi-monotone objective).
+* ``even_assignment``          — equal split (the paper's upper-bound baseline).
+* ``brute_force_assignment``   — exact optimum by exhaustive search (the
+  paper's lower-bound baseline; small K·|U| only).
+* ``single_source_plan``       — EDL+ [13]+[14]: full state from fastest neighbor.
+* ``multi_source_plan``        — Autoscaling [18]: even shards from *all* nodes,
+  multi-hop shortest-path routing (redundant-transfer pathology of Fig 1c).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.topology import Topology
+
+
+@dataclass(frozen=True)
+class NeighborLink:
+    """Measured link from neighbor u to the new node (monitor §IV-A)."""
+    prop_s: float  # t^prop (propagation delay, seconds)
+    trans_s_per_byte: float  # t^trans (per-byte transmission delay)
+    sync_s: float = 0.0  # τ^sync (all-reduce finish skew)
+
+
+@dataclass
+class Assignment:
+    """Result: shards (byte sizes) per neighbor + objective value."""
+    shard_size: int
+    shards_per_neighbor: Dict[int, List[int]]  # u -> shard indices
+    completion_s: float  # objective θ (Eq. 8)
+    per_neighbor_s: Dict[int, float]
+
+    @property
+    def n_shards(self) -> int:
+        return sum(len(v) for v in self.shards_per_neighbor.values())
+
+
+def completion_time(
+    counts: Dict[int, int], s: int, neighbors: Dict[int, NeighborLink]
+) -> Tuple[float, Dict[int, float]]:
+    """Eq. (4): max_u (prop + s·trans·|K_u| + sync) over neighbors with work."""
+    per = {}
+    for u, link in neighbors.items():
+        c = counts.get(u, 0)
+        per[u] = link.prop_s + link.sync_s + s * link.trans_s_per_byte * c if c else 0.0
+    worst = max(per.values()) if per else 0.0
+    return worst, per
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2 — greedy least-estimated-load (P3).
+# ---------------------------------------------------------------------------
+
+
+def greedy_shard_assignment(
+    n_shards: int, s: int, neighbors: Dict[int, NeighborLink]
+) -> Assignment:
+    """Paper Algorithm 2. l_u ← prop_u + sync_u (initial term); repeatedly give
+    the next shard to argmin_u (l_u + s·trans_u) and bump l_u (update term).
+
+    O(K log |U|) with a heap.
+    """
+    if not neighbors:
+        raise ValueError("no neighbors to pull from")
+    loads = {u: l.prop_s + l.sync_s for u, l in neighbors.items()}
+    inc = {u: s * l.trans_s_per_byte for u, l in neighbors.items()}
+    heap = [(loads[u] + inc[u], u) for u in neighbors]
+    heapq.heapify(heap)
+    shards: Dict[int, List[int]] = {u: [] for u in neighbors}
+    for k in range(n_shards):
+        est, u = heapq.heappop(heap)
+        shards[u].append(k)
+        loads[u] = est
+        heapq.heappush(heap, (loads[u] + inc[u], u))
+    counts = {u: len(v) for u, v in shards.items()}
+    worst, per = completion_time(counts, s, neighbors)
+    return Assignment(s, shards, worst, per)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 — binary search over shard size s (P2).
+# ---------------------------------------------------------------------------
+
+
+def binary_search_assignment(
+    tensor_sizes: Sequence[int],
+    neighbors: Dict[int, NeighborLink],
+    *,
+    max_shards: int = 8192,
+    solver=greedy_shard_assignment,
+) -> Assignment:
+    """Paper Algorithm 1. s ranges over [min tensor size, max tensor size];
+    binary search assumes quasi-monotonicity of θ(s) (§III-A).
+
+    ``max_shards`` keeps K = ⌈|w|/s⌉ bounded (production guard; the paper's
+    range start at min-layer-size can make K huge for LLM states).
+    """
+    total = int(sum(tensor_sizes))
+    if total <= 0:
+        raise ValueError("empty training state")
+    s_lo = max(1, min(int(t) for t in tensor_sizes if t > 0))
+    s_hi = max(int(t) for t in tensor_sizes)
+    s_lo = max(s_lo, math.ceil(total / max_shards))
+    s_hi = max(s_hi, s_lo)
+
+    best: Optional[Assignment] = None
+    lo, hi = s_lo, s_hi
+    while lo <= hi:
+        s = (lo + hi) // 2
+        k = math.ceil(total / s)
+        cand = solver(k, s, neighbors)
+        if best is None or cand.completion_s < best.completion_s:
+            best = cand
+            hi = s - 1  # improvement → try smaller shards (finer balance)
+        else:
+            lo = s + 1  # worse → try larger shards (less overhead)
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Baselines (paper §VI-F ablations).
+# ---------------------------------------------------------------------------
+
+
+def even_assignment(
+    n_shards: int, s: int, neighbors: Dict[int, NeighborLink]
+) -> Assignment:
+    """Equal split across neighbors — the paper's upper-bound baseline."""
+    us = sorted(neighbors)
+    shards = {u: [] for u in us}
+    for k in range(n_shards):
+        shards[us[k % len(us)]].append(k)
+    counts = {u: len(v) for u, v in shards.items()}
+    worst, per = completion_time(counts, s, neighbors)
+    return Assignment(s, shards, worst, per)
+
+
+def brute_force_assignment(
+    n_shards: int, s: int, neighbors: Dict[int, NeighborLink]
+) -> Assignment:
+    """Exact optimum of P3 by exhaustive enumeration (lower bound).
+
+    Because shards are interchangeable (equal size s), only the per-neighbor
+    *counts* matter: enumerate compositions of K over |U| — exponentially
+    cheaper than raw x_uj enumeration while provably equivalent.
+    """
+    us = sorted(neighbors)
+    best_counts, best_val = None, float("inf")
+    for counts in _compositions(n_shards, len(us)):
+        cmap = dict(zip(us, counts))
+        val, _ = completion_time(cmap, s, neighbors)
+        if val < best_val:
+            best_val, best_counts = val, cmap
+    shards = {u: [] for u in us}
+    nxt = 0
+    for u in us:
+        for _ in range(best_counts[u]):
+            shards[u].append(nxt)
+            nxt += 1
+    worst, per = completion_time(best_counts, s, neighbors)
+    return Assignment(s, shards, worst, per)
+
+
+def _compositions(total: int, parts: int):
+    if parts == 1:
+        yield (total,)
+        return
+    for first in range(total + 1):
+        for rest in _compositions(total - first, parts - 1):
+            yield (first,) + rest
+
+
+# ---------------------------------------------------------------------------
+# Whole-plan baselines (replication mechanisms, §VI-F ablation 1).
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ReplicationPlan:
+    """What each source sends to the new node, with predicted delay."""
+    strategy: str
+    sources: Dict[int, int]  # source node -> bytes to send
+    routes: Dict[int, List[int]]  # source node -> path to new node
+    predicted_delay_s: float
+
+
+def measured_neighbors(
+    topo: Topology, new_node: int, sync: Optional[Dict[int, float]] = None
+) -> Dict[int, NeighborLink]:
+    """Monitor measurement of direct neighbors (iperf stand-in, §IV-A)."""
+    out = {}
+    for u in topo.neighbors(new_node):
+        l = topo.link(u, new_node)
+        out[u] = NeighborLink(l.latency_s, l.trans_delay_per_byte,
+                              (sync or {}).get(u, 0.0))
+    return out
+
+
+def chaos_plan(
+    topo: Topology, new_node: int, state_bytes: int,
+    tensor_sizes: Sequence[int], sync: Optional[Dict[int, float]] = None,
+    solver=binary_search_assignment,
+) -> ReplicationPlan:
+    """Multi-neighbor replication with Algorithm 1+2 shard scheduling."""
+    nb = measured_neighbors(topo, new_node, sync)
+    asg = solver(tensor_sizes, nb)
+    sources = {u: len(ks) * asg.shard_size for u, ks in
+               asg.shards_per_neighbor.items() if ks}
+    routes = {u: [u, new_node] for u in sources}
+    return ReplicationPlan("chaos", sources, routes, asg.completion_s)
+
+
+def chaos_even_plan(topo, new_node, state_bytes, tensor_sizes, sync=None):
+    """Multi-neighbor replication with *even* shards (ablation variant)."""
+    nb = measured_neighbors(topo, new_node, sync)
+    k = len(nb)
+    s = math.ceil(state_bytes / k)
+    asg = even_assignment(k, s, nb)
+    sources = {u: len(ks) * s for u, ks in asg.shards_per_neighbor.items() if ks}
+    return ReplicationPlan("multi-neighbor-even", sources,
+                           {u: [u, new_node] for u in sources}, asg.completion_s)
+
+
+def single_source_plan(
+    topo: Topology, new_node: int, state_bytes: int, sync=None
+) -> ReplicationPlan:
+    """EDL+ [13]/Elan [14]: pull everything from the fastest neighbor."""
+    nb = measured_neighbors(topo, new_node, sync)
+    if not nb:
+        raise ValueError("new node has no neighbors")
+    best_u, best_t = None, float("inf")
+    for u, l in nb.items():
+        t = l.prop_s + l.sync_s + state_bytes * l.trans_s_per_byte
+        if t < best_t:
+            best_u, best_t = u, t
+    return ReplicationPlan("single-source", {best_u: state_bytes},
+                           {best_u: [best_u, new_node]}, best_t)
+
+
+def multi_source_plan(
+    topo: Topology, new_node: int, state_bytes: int, sync=None
+) -> ReplicationPlan:
+    """Autoscaling [18]: even shards from ALL active nodes, routed along
+    shortest paths — multi-hop forwards included (Fig 1c pathology)."""
+    others = [n for n in topo.active_nodes() if n != new_node]
+    if not others:
+        raise ValueError("no sources")
+    share = math.ceil(state_bytes / len(others))
+    sources, routes = {}, {}
+    link_load: Dict[Tuple[int, int], float] = {}
+    worst_path = 0.0
+    for u in others:
+        path = topo.shortest_path(u, new_node, share)
+        prop, trans = topo.path_delay_per_byte(path)
+        sources[u] = share
+        routes[u] = path
+        worst_path = max(worst_path, prop + share * trans + (sync or {}).get(u, 0.0))
+        for a, b in zip(path, path[1:]):
+            key = (min(a, b), max(a, b))
+            link_load[key] = link_load.get(key, 0.0) + share
+    # Multi-hop routes serialize on shared links (Fig 1c): the completion time
+    # is bounded below by the most-loaded link's drain time.
+    bottleneck = max(
+        (load * topo.link(a, b).trans_delay_per_byte
+         for (a, b), load in link_load.items()),
+        default=0.0,
+    )
+    return ReplicationPlan("multi-source", sources, routes,
+                           max(worst_path, bottleneck))
+
+
+# ---------------------------------------------------------------------------
+# Ragged-shard variants — Algorithm 1 splits *tensors*, so real shard lists
+# contain remainder shards smaller than s (this raggedness is what opens the
+# LPT optimality gap the paper measures in Fig 16).
+# ---------------------------------------------------------------------------
+
+
+def ragged_shards(tensor_sizes: Sequence[int], s: int) -> List[int]:
+    """Split each tensor into s-byte shards + its remainder shard."""
+    out = []
+    for t in tensor_sizes:
+        t = int(t)
+        while t >= s:
+            out.append(s)
+            t -= s
+        if t > 0:
+            out.append(t)
+    return out
+
+
+def greedy_ragged_assignment(
+    shard_sizes: Sequence[int], neighbors: Dict[int, NeighborLink],
+    sort_desc: bool = True,
+) -> Tuple[Dict[int, List[int]], float]:
+    """LPT over heterogeneous shard sizes; returns (assignment, makespan)."""
+    order = sorted(range(len(shard_sizes)), key=lambda i: -shard_sizes[i]) \
+        if sort_desc else list(range(len(shard_sizes)))
+    loads = {u: l.prop_s + l.sync_s for u, l in neighbors.items()}
+    assign: Dict[int, List[int]] = {u: [] for u in neighbors}
+    for idx in order:
+        sz = shard_sizes[idx]
+        u = min(neighbors, key=lambda u: loads[u] + sz * neighbors[u].trans_s_per_byte)
+        loads[u] += sz * neighbors[u].trans_s_per_byte
+        assign[u].append(idx)
+    return assign, max(loads.values())
+
+
+def brute_force_ragged(
+    shard_sizes: Sequence[int], neighbors: Dict[int, NeighborLink],
+) -> float:
+    """Exact optimal makespan by branch-and-bound (small instances only)."""
+    us = sorted(neighbors)
+    base = {u: neighbors[u].prop_s + neighbors[u].sync_s for u in us}
+    inc = {u: neighbors[u].trans_s_per_byte for u in us}
+    order = sorted(range(len(shard_sizes)), key=lambda i: -shard_sizes[i])
+    best = [float("inf")]
+
+    def rec(i, loads):
+        cur = max(loads.values())
+        if cur >= best[0]:
+            return
+        if i == len(order):
+            best[0] = cur
+            return
+        sz = shard_sizes[order[i]]
+        tried = set()
+        for u in us:
+            key = (round(loads[u], 12))
+            if key in tried:
+                continue
+            tried.add(key)
+            loads2 = dict(loads)
+            loads2[u] = loads[u] + sz * inc[u]
+            rec(i + 1, loads2)
+
+    rec(0, dict(base))
+    return best[0]

@@ -1,0 +1,201 @@
+"""Discrete-event simulator for the Chaos control plane.
+
+Replaces the paper's Docker/tc testbed (§VI-A): virtual-clock event kernel, a
+network with per-link store-and-forward FIFO occupancy (multi-hop routes pay
+per-hop latency AND contend for links — the Fig 1c pathology emerges
+naturally), and synchronous-training iterations with per-node compute times
+and all-reduce barriers. The peer-negotiation protocols (negotiation.py) and
+the cluster monitor (monitor.py) run *inside* this simulator exchanging real
+control messages, so the measured scale-out / scale-in / connect-link /
+disconnect-link delays are produced by protocol execution, not closed-form
+formulas.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.topology import Link, Topology
+
+CONTROL_MSG_BYTES = 1024.0  # small JSON-ish control messages
+
+
+class Sim:
+    """Minimal event kernel."""
+
+    def __init__(self):
+        self.now = 0.0
+        self._heap: list = []
+        self._seq = itertools.count()
+
+    def at(self, t: float, fn: Callable[[], None]):
+        heapq.heappush(self._heap, (max(t, self.now), next(self._seq), fn))
+
+    def after(self, dt: float, fn: Callable[[], None]):
+        self.at(self.now + dt, fn)
+
+    def run(self, until: Optional[float] = None):
+        while self._heap:
+            t, _, fn = self._heap[0]
+            if until is not None and t > until:
+                break
+            heapq.heappop(self._heap)
+            self.now = t
+            fn()
+        if until is not None:
+            self.now = max(self.now, until)
+
+
+class Network:
+    """Store-and-forward transfers with per-link FIFO occupancy."""
+
+    def __init__(self, sim: Sim, topo: Topology):
+        self.sim = sim
+        self.topo = topo
+        self._link_free: Dict[Tuple[int, int], float] = {}
+        self.bytes_on_wire = 0.0
+        self.control_messages = 0
+
+    def _key(self, u, v):
+        return (min(u, v), max(u, v))
+
+    def _hop(self, u: int, v: int, nbytes: float, t_arrive: float) -> float:
+        """Returns delivery time of the payload at v, honoring link FIFO."""
+        link = self.topo.link(u, v)
+        key = self._key(u, v)
+        start = max(t_arrive, self._link_free.get(key, 0.0))
+        done = start + link.latency_s + nbytes * link.trans_delay_per_byte
+        self._link_free[key] = start + nbytes * link.trans_delay_per_byte
+        return done
+
+    def transfer(self, route: List[int], nbytes: float,
+                 on_done: Callable[[float], None]):
+        """Send ``nbytes`` along ``route`` (store-and-forward per hop)."""
+        t = self.sim.now
+        for a, b in zip(route, route[1:]):
+            t = self._hop(a, b, nbytes, t)
+            self.bytes_on_wire += nbytes
+        self.sim.at(t, lambda: on_done(t))
+
+    def control(self, u: int, v: int, on_done: Callable[[], None],
+                payload_bytes: float = CONTROL_MSG_BYTES):
+        """Control message over the direct link (or shortest route)."""
+        self.control_messages += 1
+        if u == v:
+            self.sim.after(1e-6, on_done)
+            return
+        if self.topo.has_link(u, v):
+            route = [u, v]
+        else:
+            route = self.topo.shortest_path(u, v, payload_bytes)
+        t = self.sim.now
+        for a, b in zip(route, route[1:]):
+            # Control messages don't meaningfully occupy links.
+            t += self.topo.link(a, b).latency_s
+        self.sim.at(t, lambda: on_done())
+
+
+# ---------------------------------------------------------------------------
+# Synchronous training session with barriers.
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class TrainEvents:
+    """Per-node bookkeeping for idle-time accounting."""
+    compute_done: Dict[int, float] = field(default_factory=dict)
+    allreduce_done: Dict[int, float] = field(default_factory=dict)
+    blocked: Dict[int, float] = field(default_factory=dict)  # accumulated idle
+
+
+class TrainingSession:
+    """Iteration-driven synchronous data-parallel training.
+
+    Each iteration: every active node computes for ``compute_s`` (own speed),
+    waits at the all-reduce barrier, then all-reduce runs for a time set by a
+    simple decentralized-ring model over the overlay; per-node finish skew
+    (τ^sync) is derived from each node's slowest incident link.
+    """
+
+    def __init__(self, sim: Sim, net: Network, topo: Topology,
+                 state_bytes: int):
+        self.sim = sim
+        self.net = net
+        self.topo = topo
+        self.state_bytes = state_bytes
+        self.iteration = 0
+        self.events = TrainEvents()
+        self.idle: Dict[int, float] = {}
+        self.sync_skew: Dict[int, float] = {}
+        self._barrier_extra: Dict[int, float] = {}  # injected stalls (scale-out)
+        self._iter_cb: List[Callable[[int], None]] = []
+        self.paused = False
+
+    # -- models -------------------------------------------------------------
+
+    def allreduce_time(self) -> float:
+        nodes = self.topo.active_nodes()
+        n = len(nodes)
+        if n <= 1:
+            return 0.0
+        # Ring all-reduce over the overlay: 2(n-1)/n of state over the
+        # bottleneck link + latency per step.
+        links = [self.topo.link(u, v) for u, v in self.topo.g.edges
+                 if self.topo.nodes[u].state == "active"
+                 and self.topo.nodes[v].state == "active"]
+        if not links:
+            return 0.0
+        bw = min(l.bytes_per_s for l in links)
+        lat = max(l.latency_s for l in links)
+        return 2 * (n - 1) / n * self.state_bytes / bw + 2 * (n - 1) * lat
+
+    def node_sync_skew(self, u: int) -> float:
+        """τ^sync estimate: slower-linked nodes exit the ring later."""
+        nbrs = self.topo.neighbors(u)
+        if not nbrs:
+            return 0.0
+        worst = max(self.topo.link(u, v).latency_s for v in nbrs)
+        return worst * len(self.topo.active_nodes())
+
+    # -- iteration loop -------------------------------------------------------
+
+    def on_iteration(self, cb: Callable[[int], None]):
+        self._iter_cb.append(cb)
+
+    def inject_stall(self, node: int, seconds: float):
+        """Extra time ``node`` must spend before the next barrier (e.g. while
+        serving state shards synchronously — not used by Chaos, which
+        overlaps; used by the EDL+/Autoscaling barrier models)."""
+        self._barrier_extra[node] = self._barrier_extra.get(node, 0.0) + seconds
+
+    def run_iterations(self, n: int) -> Dict[int, float]:
+        """Run n iterations; returns accumulated per-node idle seconds."""
+        for _ in range(n):
+            self.step()
+        return dict(self.idle)
+
+    def step(self):
+        nodes = self.topo.active_nodes()
+        if not nodes:
+            return
+        t0 = self.sim.now
+        ready = {}
+        for u in nodes:
+            c = self.topo.nodes[u].compute_s
+            ready[u] = t0 + c + self._barrier_extra.pop(u, 0.0)
+        barrier = max(ready.values())
+        for u in nodes:
+            self.idle[u] = self.idle.get(u, 0.0) + (barrier - ready[u])
+        ar = self.allreduce_time()
+        for u in nodes:
+            skew = self.node_sync_skew(u)
+            self.sync_skew[u] = skew
+            self.events.allreduce_done[u] = barrier + ar + skew
+        end = barrier + ar + (max(self.sync_skew[u] for u in nodes) if nodes else 0.0)
+        self.sim.run(until=end)
+        self.iteration += 1
+        for cb in list(self._iter_cb):
+            cb(self.iteration)

@@ -1,0 +1,8 @@
+from repro.data.synthetic import (
+    TokenStream,
+    ImageStream,
+    node_split,
+    make_train_batch,
+)
+
+__all__ = ["TokenStream", "ImageStream", "node_split", "make_train_batch"]

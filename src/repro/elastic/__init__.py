@@ -1,0 +1,3 @@
+from repro.elastic.trainer import ElasticTrainer
+
+__all__ = ["ElasticTrainer"]

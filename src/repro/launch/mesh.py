@@ -1,0 +1,23 @@
+"""Production meshes (task spec: MULTI-POD DRY-RUN step 1).
+
+``make_production_mesh`` is a function — importing this module never touches
+jax device state. Single pod: (data=16, model=16) = 256 chips; multi-pod:
+(pod=2, data=16, model=16) = 512 chips. The ``pod`` axis is DP-outer (DCN);
+``data`` carries DP + ZeRO-3 param sharding; ``model`` carries TP/EP.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(*, multi_pod: bool = False):
+    """Tiny mesh for CI-scale dry-run smoke tests (8 host devices)."""
+    shape = (2, 2, 2) if multi_pod else (2, 2)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)

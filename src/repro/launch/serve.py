@@ -1,0 +1,91 @@
+"""Production serving launcher: batched prefill + autoregressive decode with
+KV caches, request-batching loop, and per-phase timing.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+        [--requests 3] [--batch 4] [--prompt-len 32] [--tokens 16]
+
+Serves the reduced config on host devices; the full-config serving graphs
+(prefill_32k / decode_32k / long_500k) are exercised via the dry-run at
+production mesh scale (`repro.launch.dryrun`).
+"""
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--requests", type=int, default=3)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S, T = args.batch, args.prompt_len, args.tokens
+    total = S + T
+
+    from repro.models import transformer, rwkv6, zamba2
+
+    decode = jax.jit(lambda p, b: model.decode_step(p, b))
+    key = jax.random.PRNGKey(1)
+
+    for req in range(args.requests):
+        key = jax.random.fold_in(key, req)
+        prompts = jax.random.randint(key, (B, S), 0, cfg.vocab)
+        t0 = time.perf_counter()
+        if cfg.family in ("dense", "moe", "vlm"):
+            prefix = cfg.n_patches if cfg.family == "vlm" else 0
+            cache = transformer.make_cache(cfg, B, total, prefix=prefix)
+            kwargs = {}
+            if cfg.family == "vlm":
+                kwargs["patch_embeds"] = jnp.zeros(
+                    (B, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+            logits, cache, _ = transformer.forward(
+                cfg, params, prompts, cache=cache,
+                cache_pos=jnp.zeros((), jnp.int32), last_only=True, **kwargs)
+        elif cfg.family == "encdec":
+            cache = __import__("repro.models.whisper", fromlist=["x"]).make_cache(cfg, B, total)
+            frames = jnp.zeros((B, cfg.enc_len, cfg.d_model), jnp.bfloat16)
+            from repro.models import whisper
+
+            logits, cache, _ = whisper.forward(
+                cfg, params, prompts, frames=frames, cache=cache,
+                cache_pos=jnp.zeros((), jnp.int32), last_only=True)
+        else:
+            logits, cache = model.prefill(params, {"tokens": prompts})
+        jax.block_until_ready(logits)
+        prefill_ms = (time.perf_counter() - t0) * 1e3
+
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out = [tok]
+        t1 = time.perf_counter()
+        for t in range(T - 1):
+            pos = jnp.asarray(S + t, jnp.int32)
+            logits, cache = decode(params, {"tokens": tok, "pos": pos,
+                                            "cache": cache})
+            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            out.append(tok)
+        jax.block_until_ready(tok)
+        decode_ms = (time.perf_counter() - t1) * 1e3
+        gen = np.asarray(jnp.concatenate(out, axis=1))
+        print(f"req {req}: prefill {prefill_ms:.0f} ms | decode {T} toks "
+              f"{decode_ms:.0f} ms ({decode_ms/max(T-1,1):.1f} ms/tok) | "
+              f"sample {gen[0][:8]}")
+    print("SERVE_OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,66 @@
+"""Opt-in activation sharding constraints.
+
+Model code is mesh-agnostic; the launcher (dryrun/train/serve) installs a
+context so that hot activations (q/k/v, attention output, MLP hidden) carry
+explicit `with_sharding_constraint`s — preventing GSPMD "involuntary full
+rematerialization" reshards at reshape boundaries. No-op when no context is
+installed (single-device tests/examples).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CTX: Optional[Tuple[Mesh, Tuple[str, ...]]] = None
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, tp: bool = True):
+    """tp=False: pure-DP mapping — the batch spans every mesh axis and
+    "model"-dim constraints are dropped (small-model train cells)."""
+    global _CTX
+    ba = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    if not tp:
+        ba = ba + ("model",)
+    prev = _CTX
+    _CTX = (mesh, ba, tp)
+    try:
+        yield
+    finally:
+        _CTX = prev
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def get_ctx():
+    """Returns (mesh, batch_axes, tp) when a launcher installed one."""
+    return _CTX
+
+
+def constrain(x, *dims):
+    """dims: one entry per axis of x — "batch", "model", "data", or None.
+    Dims that don't divide are silently dropped to None."""
+    if _CTX is None:
+        return x
+    mesh, ba, tp = _CTX
+    spec = []
+    for size, d in zip(x.shape, dims):
+        if d is None or (d == "model" and not tp):
+            spec.append(None)
+            continue
+        axis = ba if d == "batch" else d
+        if size % _axis_size(mesh, axis) == 0:
+            spec.append(axis)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))

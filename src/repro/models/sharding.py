@@ -1,0 +1,256 @@
+"""GSPMD sharding rules for every architecture (DESIGN.md §6).
+
+Axes: ``pod`` (DP-outer across pods), ``data`` (DP + ZeRO-3/FSDP param
+sharding), ``model`` (TP: heads / FFN hidden / vocab / experts).
+
+Rules are keyed on parameter paths; every dim is sharded only when divisible
+by the axis size (heterogeneous vocab sizes, MQA kv-heads etc. degrade to
+replication rather than failing). Caches shard kv-heads over ``model`` when
+there are enough heads, else the sequence dim (flash-decoding-style partial
+softmax via GSPMD reductions); long-context decode additionally shards the
+cache sequence over ``data`` (SP).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# (pattern, kind) — first match wins.
+RULES = [
+    (re.compile(r"embed/tok$"), "embed"),
+    (re.compile(r"embed/unembed$"), "expand"),
+    (re.compile(r"(^|/)(pos|enc_pos)$"), "pos"),
+    (re.compile(r"cm/wv$"), "contract"),
+    (re.compile(r"cm/(wk|wr)$"), "expand"),
+    (re.compile(r"tm/(wr|wk|wv|wg)$"), "expand"),
+    (re.compile(r"tm/wo$"), "contract"),
+    (re.compile(r"(attn|xattn)/wq$"), "expand"),
+    (re.compile(r"(attn|xattn)/(wk|wv)$"), "kv_expand"),
+    (re.compile(r"(attn|xattn)/wo$"), "contract"),
+    (re.compile(r"moe/(w1|w3)$"), "experts_expand"),
+    (re.compile(r"moe/w2$"), "experts_contract"),
+    (re.compile(r"(shared|dense)/(w1|w3)$"), "expand"),
+    (re.compile(r"(shared|dense)/w2$"), "contract"),
+    (re.compile(r"mlp/(w1|w3)$"), "expand"),
+    (re.compile(r"mlp/w2$"), "contract"),
+    (re.compile(r"router$"), "expand"),
+    (re.compile(r"in_proj$"), "expand"),
+    (re.compile(r"out_proj$"), "contract"),
+    (re.compile(r"conv_w$"), "conv"),
+    (re.compile(r"conv_b$"), "conv_b"),
+    # rwkv6 ddlerp/decay LoRA mats are tiny (d×160, d×64): replicate — sharding
+    # them costs an all-reduce per layer for nothing (hillclimb B3).
+]
+
+
+def _div(n: int, mesh: Mesh, axis: Optional[str]):
+    if axis is None:
+        return None
+    size = mesh.shape[axis] if not isinstance(axis, tuple) else int(
+        np.prod([mesh.shape[a] for a in axis]))
+    return axis if n % size == 0 and size > 1 else None
+
+
+def batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def _leaf_spec(kind: str, shape, mesh: Mesh, fsdp: bool, cfg=None) -> P:
+    nd = len(shape)
+    fa = "data" if fsdp else None
+    if kind == "kv_expand":
+        # GQA K/V projections: shard heads over "model" only when every model
+        # shard owns whole kv heads (Megatron GQA convention); otherwise
+        # replicate K/V across "model" — avoids involuntary GSPMD full
+        # rematerialization on the (B,S,K,hd) reshape.
+        lead = [None] * (nd - 2)
+        kv_ok = cfg is not None and cfg.n_kv_heads % mesh.shape["model"] == 0
+        last = _div(shape[-1], mesh, "model") if kv_ok else None
+        return P(*lead, _div(shape[-2], mesh, fa), last)
+    if kind == "embed":  # (V, d)
+        return P(_div(shape[0], mesh, "model"), _div(shape[1], mesh, fa))
+    if kind == "pos":  # (n, d)
+        return P(None, _div(shape[1], mesh, "model"))
+    if kind == "expand":  # (..., d_in, d_out)
+        lead = [None] * (nd - 2)
+        return P(*lead, _div(shape[-2], mesh, fa), _div(shape[-1], mesh, "model"))
+    if kind == "contract":  # (..., d_in, d_out) with d_in the sharded-out dim
+        lead = [None] * (nd - 2)
+        return P(*lead, _div(shape[-2], mesh, "model"), _div(shape[-1], mesh, fa))
+    if kind == "experts_expand":  # (..., E, d, ff)
+        lead = [None] * (nd - 3)
+        return P(*lead, _div(shape[-3], mesh, "model"), _div(shape[-2], mesh, fa), None)
+    if kind == "experts_contract":  # (..., E, ff, d)
+        lead = [None] * (nd - 3)
+        return P(*lead, _div(shape[-3], mesh, "model"), None, _div(shape[-1], mesh, fa))
+    if kind == "conv":  # (..., K, C)
+        lead = [None] * (nd - 1)
+        return P(*lead, _div(shape[-1], mesh, "model"))
+    if kind == "conv_b":  # (..., C)
+        lead = [None] * (nd - 1)
+        return P(*lead, _div(shape[-1], mesh, "model"))
+    return P()
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+FSDP_MIN_PARAMS = 8e9  # below this, ZeRO-3 param sharding costs more in
+# per-layer partial-reduce collectives than it saves in memory (§Perf B4/C3)
+
+
+def _fsdp_on(cfg) -> bool:
+    return cfg.fsdp and cfg.param_count() >= FSDP_MIN_PARAMS
+
+
+def dp_only_mapping(cfg, cell, mesh: Mesh) -> bool:
+    """Small models on a big mesh train fastest as pure DP over every axis
+    (ZeRO-sharded states, no TP activation all-reduces) — §Perf C3/B4."""
+    import math as _m
+    n_dev = _m.prod(mesh.devices.shape)
+    return (cfg.param_count() < 3e9 and cell is not None
+            and cell.kind == "train" and cell.global_batch % n_dev == 0)
+
+
+def _dp_flat_spec(shape, mesh: Mesh):
+    """ZeRO over the flattened device count: shard the largest divisible dim
+    over ("data","model") (+"pod" handled by divisibility)."""
+    axes = tuple(a for a in ("pod", "data", "model") if a in mesh.shape)
+    best = None
+    for i, n in enumerate(shape):
+        if _div(n, mesh, axes) and (best is None or n > shape[best]):
+            best = i
+    spec = [None] * len(shape)
+    if best is not None:
+        spec[best] = axes
+    return P(*spec)
+
+
+def param_specs_tree(param_shapes, cfg, mesh: Mesh, tp: bool = True):
+    """PartitionSpec pytree for a params (or params-shaped) tree."""
+    fsdp = _fsdp_on(cfg)
+
+    def one(path, leaf):
+        if not tp:
+            return _dp_flat_spec(leaf.shape, mesh)
+        p = _path_str(path)
+        for pat, kind in RULES:
+            if pat.search(p):
+                return _leaf_spec(kind, leaf.shape, mesh, fsdp, cfg)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(one, param_shapes)
+
+
+def opt_specs_tree(opt_shapes, param_spec_tree, cfg, mesh: Mesh, tp: bool = True):
+    """Optimizer state: fp32 moments mirror param specs; int8 codes/scales
+    shard their flat block dim across (data, model)."""
+    flat_axes = ("data", "model")
+
+    fsdp = _fsdp_on(cfg)
+
+    def base_spec(sub, pshape):
+        if not tp:
+            return _dp_flat_spec(pshape, mesh)
+        for pat, kind in RULES:
+            if pat.search(sub):
+                return _leaf_spec(kind, pshape, mesh, fsdp, cfg)
+        return P(*([None] * len(pshape)))
+
+    def one(path, leaf):
+        p = _path_str(path)
+        if p == "step":
+            return P()
+        sub = re.sub(r"^(m|v|mu)/", "", p)
+        if p.endswith("/codes"):
+            # codes: param.shape[:-1] + (nb, block) — inherit the param's
+            # leading-dim sharding; the param's last-dim axis moves to nb.
+            pshape = leaf.shape[:-2] + (leaf.shape[-2] * leaf.shape[-1],)
+            bs = list(base_spec(sub[: -len("/codes")], pshape))
+            last = bs[-1] if bs else None
+            return P(*bs[:-1], _div(leaf.shape[-2], mesh, last), None)
+        if p.endswith("/scale"):
+            pshape = leaf.shape[:-1] + (leaf.shape[-1] * 256,)
+            bs = list(base_spec(sub[: -len("/scale")], pshape))
+            last = bs[-1] if bs else None
+            return P(*bs[:-1], _div(leaf.shape[-1], mesh, last))
+        return base_spec(sub, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(one, opt_shapes)
+
+
+def state_specs_tree(state_shapes, cfg, mesh: Mesh, tp: bool = True):
+    return {
+        "params": param_specs_tree(state_shapes["params"], cfg, mesh, tp=tp),
+        "opt": opt_specs_tree(state_shapes["opt"], None, cfg, mesh, tp=tp),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache / output specs.
+# ---------------------------------------------------------------------------
+
+
+def batch_spec_tree(batch_shapes, cfg, mesh: Mesh, *, cell=None, tp: bool = True):
+    ba = batch_axes(mesh)
+    if not tp:
+        ba = ba + ("model",)
+
+    def one(path, leaf):
+        p = _path_str(path)
+        if p.startswith("cache"):
+            return _cache_leaf_spec(p, leaf, cfg, mesh, cell)
+        if leaf.shape == ():
+            return P()
+        b = _div(leaf.shape[0], mesh, ba)
+        return P(b, *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map_with_path(one, batch_shapes)
+
+
+def _cache_leaf_spec(p, leaf, cfg, mesh: Mesh, cell):
+    ba = batch_axes(mesh)
+    shape = leaf.shape
+    if shape == ():
+        return P()
+    long_ctx = cell is not None and cell.seq_len >= 262_144
+    if p.endswith("/k") or p.endswith("/v") or p.endswith("attn_k") or p.endswith("attn_v") \
+            or p.endswith("/xk") or p.endswith("/xv"):
+        # (L, B, S, K, hd)
+        Lr, B, S, K, hd = shape
+        b = _div(B, mesh, ba)
+        if K % mesh.shape["model"] == 0 and K >= cfg.shard_cache_heads_min:
+            return P(None, b, _div(S, mesh, "data") if (long_ctx and b is None) else None,
+                     "model", None)
+        # flash-decoding style: shard the sequence over "model"
+        s_axis = _div(S, mesh, "model")
+        return P(None, b, s_axis, None, None)
+    if "wkv" in p:  # (L, B, H, hd, hd)
+        return P(None, _div(shape[1], mesh, ba), _div(shape[2], mesh, "model"),
+                 None, None)
+    if p.endswith("tm_x") or p.endswith("cm_x"):  # (L, B, d)
+        return P(None, _div(shape[1], mesh, ba), _div(shape[2], mesh, "model"))
+    if "mamba/h" in p or p.endswith("/h"):  # (L, B, H, P, N)
+        return P(None, _div(shape[1], mesh, ba), _div(shape[2], mesh, "model"),
+                 None, None)
+    if "conv" in p:  # (L, B, K-1, conv_dim)
+        return P(None, _div(shape[1], mesh, ba), None,
+                 _div(shape[-1], mesh, "model"))
+    b = _div(shape[0], mesh, ba) if len(shape) else None
+    return P(b, *([None] * (len(shape) - 1)))
+
+
+def logits_spec(cfg, mesh: Mesh, batch: int) -> P:
+    ba = batch_axes(mesh)
+    v = _div(cfg.vocab, mesh, "model")
+    return P(_div(batch, mesh, ba), None, v)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

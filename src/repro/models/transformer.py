@@ -1,0 +1,181 @@
+"""Decoder-only transformer (dense + MoE), covering llama/gemma2/gptbigcode
+variants and the PaliGemma prefix-LM wrapper.
+
+Layers are stacked on a leading axis and applied with ``lax.scan`` so compile
+time is O(1) in depth (llama3-405b compiles one layer body). Gemma2's
+local/global alternation is a per-layer scanned boolean driving the window
+constraint arithmetically (no cond, no double mask materialization).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models.layers import MaskSpec
+
+
+def init_layer(key, cfg):
+    ka, km, kn = jax.random.split(key, 3)
+    p = {
+        "ln1": L.init_norm(cfg.d_model, cfg.norm),
+        "attn": L.init_attention(ka, cfg),
+        "ln2": L.init_norm(cfg.d_model, cfg.norm),
+    }
+    if cfg.is_moe:
+        p["moe"] = MOE.init_moe(km, cfg)
+    else:
+        p["mlp"] = L.init_mlp(km, cfg.d_model, cfg.d_ff, cfg.mlp)
+    if cfg.post_norm:
+        p["post_ln1"] = L.init_norm(cfg.d_model, cfg.norm)
+        p["post_ln2"] = L.init_norm(cfg.d_model, cfg.norm)
+    return p
+
+
+def init_transformer(cfg, key):
+    ke, kl, kf = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    stacked = jax.vmap(lambda k: init_layer(k, cfg))(layer_keys)
+    return {
+        "embed": L.init_embed(ke, cfg),
+        "layers": stacked,
+        "final_norm": L.init_norm(cfg.d_model, cfg.norm),
+    }
+
+
+def _is_local_flags(cfg):
+    if cfg.alt_local_global:
+        # Even layers local (sliding window), odd layers global — gemma2 order.
+        return (jnp.arange(cfg.n_layers) % 2 == 0)
+    if cfg.sliding_window > 0:
+        return jnp.ones((cfg.n_layers,), jnp.bool_)
+    return jnp.zeros((cfg.n_layers,), jnp.bool_)
+
+
+def _layer_body(cfg, x, lp, is_local, spec, positions, cache_kv, cache_pos,
+                n_groups, use_pallas):
+    # Static mask selection when possible (keeps the Pallas path usable):
+    # no window -> None; uniform window -> True; gemma2 alternation keeps the
+    # traced per-layer flag (XLA path only, see kernels/ops.py).
+    if cfg.sliding_window == 0:
+        is_local = None
+    elif not cfg.alt_local_global:
+        is_local = True
+    h = L.apply_norm(lp["ln1"], x, cfg.norm, cfg.norm_eps)
+    attn_out, new_kv = L.attention_sublayer(
+        lp["attn"], h, cfg, spec, positions=positions,
+        cache_kv=cache_kv, cache_pos=cache_pos, is_local=is_local,
+        use_pallas=use_pallas,
+    )
+    if cfg.post_norm:
+        attn_out = L.apply_norm(lp["post_ln1"], attn_out, cfg.norm, cfg.norm_eps)
+    x = x + attn_out
+    h = L.apply_norm(lp["ln2"], x, cfg.norm, cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.is_moe:
+        ff, aux = MOE.moe_sublayer(lp["moe"], h, cfg, n_groups=n_groups)
+    else:
+        ff = L.mlp_sublayer(lp["mlp"], h, cfg.mlp)
+    if cfg.post_norm:
+        ff = L.apply_norm(lp["post_ln2"], ff, cfg.norm, cfg.norm_eps)
+    x = x + ff
+    return x, new_kv, aux
+
+
+def forward(
+    cfg,
+    params,
+    tokens,
+    *,
+    patch_embeds=None,
+    cache=None,
+    cache_pos=None,
+    n_groups: int = 1,
+    use_pallas: bool = False,
+    last_only: bool = False,
+    return_hidden: bool = False,
+    dtype=jnp.bfloat16,
+):
+    """Run the transformer.
+
+    Train/eval: ``cache is None`` → returns (logits, aux_loss).
+    Prefill: ``cache`` holds zeroed (k, v) of shape (Lr, B, Smax, K, hd),
+      ``cache_pos=0`` → returns (logits, new_cache, aux).
+    Decode: tokens (B, 1), ``cache_pos`` = write position → same returns.
+    """
+    B, S = tokens.shape
+    prefix = 0
+    if patch_embeds is not None:
+        prefix = patch_embeds.shape[1]
+
+    if cache is not None and cache_pos is None:
+        raise ValueError("cache requires cache_pos")
+    offset = 0 if cache_pos is None else cache_pos
+    positions = offset + jnp.arange(S + prefix, dtype=jnp.int32)
+
+    x = L.embed_tokens(params["embed"], tokens, cfg, positions=positions[prefix:],
+                       dtype=dtype)
+    if patch_embeds is not None:
+        x = jnp.concatenate([patch_embeds.astype(dtype), x], axis=1)
+
+    spec = MaskSpec(
+        kind="prefix" if prefix > 0 else "causal",
+        window=cfg.sliding_window,
+        prefix_len=prefix,
+    )
+    flags = _is_local_flags(cfg)
+
+    def body(carry, xs):
+        x, aux_acc = carry
+        if cache is None:
+            lp, is_local = xs
+            ckv = None
+        else:
+            lp, is_local, ck, cv = xs
+            ckv = (ck, cv)
+        x, new_kv, aux = _layer_body(
+            cfg, x, lp, is_local, spec, positions, ckv, cache_pos,
+            n_groups, use_pallas,
+        )
+        return (x, aux_acc + aux), new_kv
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    xs = (params["layers"], flags)
+    if cache is not None:
+        xs = xs + (cache["k"], cache["v"])
+    (x, aux), new_kv = lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+
+    x = L.apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    if prefix > 0:
+        x = x[:, prefix:]
+    if last_only:
+        x = x[:, -1:]
+    if return_hidden and cache is None:
+        return x, aux
+    logits = L.unembed(params["embed"], x, cfg)
+
+    if cache is not None:
+        out_cache = {"k": new_kv[0], "v": new_kv[1]}
+        return logits, out_cache, aux
+    return logits, aux
+
+
+def make_cache(cfg, batch, max_len, dtype=jnp.bfloat16, prefix=0):
+    shape = (cfg.n_layers, batch, max_len + prefix, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def cache_specs(cfg, batch, max_len, dtype=jnp.bfloat16, prefix=0):
+    shape = (cfg.n_layers, batch, max_len + prefix, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jax.ShapeDtypeStruct(shape, dtype),
+        "v": jax.ShapeDtypeStruct(shape, dtype),
+    }

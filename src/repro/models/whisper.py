@@ -1,0 +1,189 @@
+"""Whisper-small encoder–decoder backbone. The log-mel + conv1d frontend is a
+STUB per the task spec: inputs are precomputed frame embeddings
+(B, enc_len, d_model). Pre-LN blocks, learned positions, GELU MLPs.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models.layers import MaskSpec
+
+
+def init_enc_layer(key, cfg):
+    ka, km = jax.random.split(key)
+    return {
+        "ln1": L.init_norm(cfg.d_model, cfg.norm),
+        "attn": L.init_attention(ka, cfg),
+        "ln2": L.init_norm(cfg.d_model, cfg.norm),
+        "mlp": L.init_mlp(km, cfg.d_model, cfg.d_ff, cfg.mlp),
+    }
+
+
+def init_dec_layer(key, cfg):
+    ka, kx, km = jax.random.split(key, 3)
+    return {
+        "ln1": L.init_norm(cfg.d_model, cfg.norm),
+        "attn": L.init_attention(ka, cfg),
+        "ln_x": L.init_norm(cfg.d_model, cfg.norm),
+        "xattn": L.init_attention(kx, cfg),
+        "ln2": L.init_norm(cfg.d_model, cfg.norm),
+        "mlp": L.init_mlp(km, cfg.d_model, cfg.d_ff, cfg.mlp),
+    }
+
+
+def init_whisper(cfg, key):
+    ke, kenc, kdec, kp = jax.random.split(key, 4)
+    enc = jax.vmap(lambda k: init_enc_layer(k, cfg))(jax.random.split(kenc, cfg.enc_layers))
+    dec = jax.vmap(lambda k: init_dec_layer(k, cfg))(jax.random.split(kdec, cfg.n_layers))
+    return {
+        "embed": L.init_embed(ke, cfg),
+        "enc_pos": jax.random.normal(kp, (cfg.enc_len, cfg.d_model), jnp.float32) * 0.02,
+        "encoder": enc,
+        "enc_norm": L.init_norm(cfg.d_model, cfg.norm),
+        "decoder": dec,
+        "final_norm": L.init_norm(cfg.d_model, cfg.norm),
+    }
+
+
+def encode(cfg, params, frames, use_pallas=False):
+    """frames: (B, enc_len, d) stubbed frontend output."""
+    dt = frames.dtype
+    x = frames + params["enc_pos"].astype(dt)[None]
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(x, lp):
+        h = L.apply_norm(lp["ln1"], x, cfg.norm)
+        a, _ = L.attention_sublayer(lp["attn"], h, cfg, MaskSpec("full"),
+                                    positions=positions, use_pallas=use_pallas)
+        x = x + a
+        h = L.apply_norm(lp["ln2"], x, cfg.norm)
+        return x + L.mlp_sublayer(lp["mlp"], h, cfg.mlp), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = lax.scan(body, x, params["encoder"])
+    return L.apply_norm(params["enc_norm"], x, cfg.norm)
+
+
+def _dec_body(cfg, x, lp, positions, self_kv, cross_kv, cache_pos, use_pallas):
+    h = L.apply_norm(lp["ln1"], x, cfg.norm)
+    a, new_self = L.attention_sublayer(
+        lp["attn"], h, cfg, MaskSpec("causal"), positions=positions,
+        cache_kv=self_kv, cache_pos=cache_pos, use_pallas=use_pallas,
+    )
+    x = x + a
+    h = L.apply_norm(lp["ln_x"], x, cfg.norm)
+    # Cross-attention: teacher forcing projects enc_out; cached decode reads
+    # the precomputed per-layer cross K/V (static_kv).
+    is_cached = isinstance(cross_kv, tuple)
+    a, new_cross = L.attention_sublayer(
+        lp["xattn"], h, cfg, MaskSpec("full"), positions=positions,
+        kv_x=None if is_cached else cross_kv,
+        cache_kv=cross_kv if is_cached else None,
+        static_kv=is_cached, cache_pos=cache_pos, use_pallas=use_pallas,
+    )
+    x = x + a
+    h = L.apply_norm(lp["ln2"], x, cfg.norm)
+    return x + L.mlp_sublayer(lp["mlp"], h, cfg.mlp), new_self, new_cross
+
+
+def decode_stack(cfg, params, tokens, enc_out=None, cache=None, cache_pos=None,
+                 use_pallas=False, last_only=False, return_hidden=False,
+                 dtype=jnp.bfloat16):
+    """Teacher-forcing (enc_out given, cache None) or cached decode."""
+    B, S = tokens.shape
+    offset = 0 if cache_pos is None else cache_pos
+    positions = offset + jnp.arange(S, dtype=jnp.int32)
+    x = L.embed_tokens(params["embed"], tokens, cfg, positions=positions, dtype=dtype)
+
+    def body(carry, xs):
+        x = carry
+        if cache is None:
+            lp = xs
+            self_kv = None
+            cross = enc_out
+        else:
+            lp, sk, sv, ck, cv = xs
+            self_kv = (sk, sv)
+            cross = (ck, cv)
+        x, new_self, new_cross = _dec_body(cfg, x, lp, positions, self_kv, cross,
+                                           cache_pos, use_pallas)
+        ys = None if cache is None else (new_self + new_cross)
+        return x, ys
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    xs = params["decoder"] if cache is None else (
+        params["decoder"], cache["k"], cache["v"], cache["xk"], cache["xv"]
+    )
+    x, ys = lax.scan(body, x, xs)
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    if last_only:
+        x = x[:, -1:]
+    if return_hidden and cache is None:
+        return x, None
+    logits = L.unembed(params["embed"], x, cfg)
+    if cache is None:
+        return logits, None
+    return logits, {"k": ys[0], "v": ys[1], "xk": ys[2], "xv": ys[3]}
+
+
+def precompute_cross_kv(cfg, params, enc_out):
+    """Project encoder output to per-layer cross K/V once (prefill)."""
+    B, T, _ = enc_out.shape
+    K, hd = cfg.n_kv_heads, cfg.head_dim
+    dt = enc_out.dtype
+
+    def one(lp):
+        k = (enc_out @ lp["xattn"]["wk"].astype(dt)).reshape(B, T, K, hd)
+        v = (enc_out @ lp["xattn"]["wv"].astype(dt)).reshape(B, T, K, hd)
+        return k, v
+
+    ks, vs = jax.vmap(one, in_axes=(0,))(params["decoder"])
+    return ks, vs  # (L,B,T,K,hd)
+
+
+def forward(cfg, params, tokens, *, frames=None, cache=None, cache_pos=None,
+            n_groups=1, use_pallas=False, last_only=False, return_hidden=False,
+            dtype=jnp.bfloat16, **_):
+    aux = jnp.zeros((), jnp.float32)
+    if cache is None:
+        enc_out = encode(cfg, params, frames.astype(dtype), use_pallas=use_pallas)
+        logits, _ = decode_stack(cfg, params, tokens, enc_out=enc_out,
+                                 use_pallas=use_pallas, dtype=dtype,
+                                 return_hidden=return_hidden)
+        return logits, aux
+    # Cached path. If frames given → prefill (encode + fill cross cache).
+    if frames is not None:
+        enc_out = encode(cfg, params, frames.astype(dtype), use_pallas=use_pallas)
+        xk, xv = precompute_cross_kv(cfg, params, enc_out)
+        cache = dict(cache, xk=xk.astype(cache["xk"].dtype), xv=xv.astype(cache["xv"].dtype))
+    logits, new_cache = decode_stack(cfg, params, tokens, cache=cache,
+                                     cache_pos=cache_pos, use_pallas=use_pallas,
+                                     last_only=last_only, dtype=dtype)
+    return logits, new_cache, aux
+
+
+def make_cache(cfg, batch, max_len, dtype=jnp.bfloat16):
+    K, hd, Lr = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+    return {
+        "k": jnp.zeros((Lr, batch, max_len, K, hd), dtype),
+        "v": jnp.zeros((Lr, batch, max_len, K, hd), dtype),
+        "xk": jnp.zeros((Lr, batch, cfg.enc_len, K, hd), dtype),
+        "xv": jnp.zeros((Lr, batch, cfg.enc_len, K, hd), dtype),
+    }
+
+
+def cache_specs(cfg, batch, max_len, dtype=jnp.bfloat16):
+    K, hd, Lr = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+    return {
+        "k": jax.ShapeDtypeStruct((Lr, batch, max_len, K, hd), dtype),
+        "v": jax.ShapeDtypeStruct((Lr, batch, max_len, K, hd), dtype),
+        "xk": jax.ShapeDtypeStruct((Lr, batch, cfg.enc_len, K, hd), dtype),
+        "xv": jax.ShapeDtypeStruct((Lr, batch, cfg.enc_len, K, hd), dtype),
+    }

@@ -1,0 +1,170 @@
+"""Zamba2 hybrid: a stack of Mamba2 blocks with a single weight-shared
+attention+MLP block applied every ``shared_attn_every`` layers on
+concat([h, h₀]) (h₀ = the embedding output), following arXiv:2411.15242.
+
+Structure: the 38 Mamba2 blocks are grouped into segments of
+``shared_attn_every``; each segment starts with one application of the shared
+block, then scans its Mamba2 blocks. This keeps FLOP accounting exact (no
+dead cond branches) while the Mamba2 stack still compiles as one scanned body
+per segment.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models import mamba2 as M2
+from repro.models.layers import MaskSpec
+
+
+def _segments(cfg):
+    """Split n_layers mamba blocks into segments, each preceded by the shared
+    block. E.g. 38 layers, every 6 → apps at block 0,6,12,18,24,30,36."""
+    every = cfg.shared_attn_every
+    bounds = list(range(0, cfg.n_layers, every)) + [cfg.n_layers]
+    return [(bounds[i], bounds[i + 1]) for i in range(len(bounds) - 1)]
+
+
+def n_shared_apps(cfg):
+    return len(_segments(cfg))
+
+
+def init_shared_block(key, cfg):
+    d = cfg.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "in_proj": jax.random.normal(k1, (2 * d, d), jnp.float32) / math.sqrt(2 * d),
+        "ln1": L.init_norm(d, cfg.norm),
+        "attn": L.init_attention(k2, cfg),
+        "ln2": L.init_norm(d, cfg.norm),
+        "mlp": L.init_mlp(k3, d, cfg.d_ff, cfg.mlp),
+    }
+
+
+def init_zamba2(cfg, key):
+    ke, km, ks = jax.random.split(key, 3)
+    stacked = jax.vmap(lambda k: M2.init_block(k, cfg))(
+        jax.random.split(km, cfg.n_layers)
+    )
+    return {
+        "embed": L.init_embed(ke, cfg),
+        "mamba": stacked,
+        "shared": init_shared_block(ks, cfg),
+        "final_norm": L.init_norm(cfg.d_model, cfg.norm),
+    }
+
+
+def _shared_apply(sp, x, x0, cfg, positions, cache_kv=None, cache_pos=None,
+                  use_pallas=False):
+    dt = x.dtype
+    z = jnp.concatenate([x, x0], axis=-1) @ sp["in_proj"].astype(dt)
+    h = L.apply_norm(sp["ln1"], z, cfg.norm)
+    attn_out, new_kv = L.attention_sublayer(
+        sp["attn"], h, cfg, MaskSpec("causal"), positions=positions,
+        cache_kv=cache_kv, cache_pos=cache_pos, use_pallas=use_pallas,
+    )
+    z = z + attn_out
+    h = L.apply_norm(sp["ln2"], z, cfg.norm)
+    z = z + L.mlp_sublayer(sp["mlp"], h, cfg.mlp)
+    return x + z, new_kv
+
+
+def forward(cfg, params, tokens, *, state=None, n_groups=1, use_pallas=False,
+            last_only=False, return_hidden=False, dtype=jnp.bfloat16, **_):
+    """state (decode/prefill):
+    {"mamba": stacked block states, "attn_k"/"attn_v": (apps,B,Smax,K,hd),
+     plus "pos" handled by caller}.
+    """
+    B, S = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, cfg, dtype=dtype)
+    x0 = x
+    cache_pos = None if state is None else state["pos"]
+    positions = (0 if state is None else cache_pos) + jnp.arange(S, dtype=jnp.int32)
+
+    segs = _segments(cfg)
+    new_attn_k, new_attn_v, new_mamba = [], [], []
+
+    def seg_scan(x, mp, sts):
+        def body(carry, xs):
+            x = carry
+            if sts is None:
+                lp = xs
+                st = None
+            else:
+                lp, st = xs
+            out, new_st = M2.block_apply(lp, x, cfg, state=st, use_pallas=use_pallas)
+            return x + out, new_st
+
+        if cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        xs = mp if sts is None else (mp, sts)
+        return lax.scan(body, x, xs)
+
+    for i, (lo, hi) in enumerate(segs):
+        # Shared attention block (weight-tied across applications).
+        ckv = None
+        if state is not None:
+            ckv = (state["attn_k"][i], state["attn_v"][i])
+        x, new_kv = _shared_apply(
+            params["shared"], x, x0, cfg, positions, cache_kv=ckv,
+            cache_pos=cache_pos, use_pallas=use_pallas,
+        )
+        if new_kv is not None:
+            new_attn_k.append(new_kv[0])
+            new_attn_v.append(new_kv[1])
+        mp = jax.tree.map(lambda t: t[lo:hi], params["mamba"])
+        sts = None if state is None else jax.tree.map(lambda t: t[lo:hi], state["mamba"])
+        x, new_st = seg_scan(x, mp, sts)
+        if new_st is not None:
+            new_mamba.append(new_st)
+
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    if last_only:
+        x = x[:, -1:]
+    if return_hidden and state is None:
+        return x, jnp.zeros((), jnp.float32)
+    logits = L.unembed(params["embed"], x, cfg)
+    aux = jnp.zeros((), jnp.float32)
+    if state is not None:
+        new_state = {
+            "mamba": jax.tree.map(lambda *ts: jnp.concatenate(ts, 0), *new_mamba),
+            "attn_k": jnp.stack(new_attn_k),
+            "attn_v": jnp.stack(new_attn_v),
+            "pos": cache_pos + S,
+        }
+        return logits, new_state, aux
+    return logits, aux
+
+
+def make_state(cfg, batch, max_len, dtype=jnp.bfloat16):
+    apps = n_shared_apps(cfg)
+    mstate = jax.tree.map(
+        lambda s: jnp.zeros((cfg.n_layers,) + s.shape, s.dtype),
+        M2.block_state_specs(cfg, batch),
+    )
+    kv_shape = (apps, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "mamba": mstate,
+        "attn_k": jnp.zeros(kv_shape, dtype),
+        "attn_v": jnp.zeros(kv_shape, dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def state_specs(cfg, batch, max_len, dtype=jnp.bfloat16):
+    apps = n_shared_apps(cfg)
+    mspec = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((cfg.n_layers,) + s.shape, s.dtype),
+        M2.block_state_specs(cfg, batch),
+    )
+    kv_shape = (apps, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "mamba": mspec,
+        "attn_k": jax.ShapeDtypeStruct(kv_shape, dtype),
+        "attn_v": jax.ShapeDtypeStruct(kv_shape, dtype),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }

@@ -1,0 +1,16 @@
+from repro.optim.adamw import adamw, adamw8bit, sgdm, make_optimizer
+from repro.optim.compression import topk_compress_ef, int8_quantize, int8_dequantize
+from repro.optim.lora import lora_init, lora_apply_delta, lora_merge
+
+__all__ = [
+    "adamw",
+    "adamw8bit",
+    "sgdm",
+    "make_optimizer",
+    "topk_compress_ef",
+    "int8_quantize",
+    "int8_dequantize",
+    "lora_init",
+    "lora_apply_delta",
+    "lora_merge",
+]

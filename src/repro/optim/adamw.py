@@ -1,0 +1,188 @@
+"""Optimizers: AdamW (fp32 moments), AdamW-8bit (block-quantized moments for
+the ≥400 B-param configs — a distributed-optimization memory trick that keeps
+per-chip optimizer bytes within v5e HBM), and SGD-momentum.
+
+API mirrors optax: ``init(params) -> state``, ``update(grads, state, params)
+-> (updates, state)``; updates are *subtracted* from params by the caller.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Q_BLOCK = 256  # elements per quantization block
+
+
+class Optimizer(NamedTuple):
+    init: callable
+    update: callable
+
+
+def _tmap(f, *trees, **kw):
+    return jax.tree.map(f, *trees, **kw)
+
+
+# ---------------------------------------------------------------------------
+# AdamW (fp32 states).
+# ---------------------------------------------------------------------------
+
+
+def adamw(lr=3e-4, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1):
+    def init(params):
+        zeros = _tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"m": zeros, "v": jax.tree.map(jnp.copy, zeros),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr_scale=1.0):
+        step = state["step"] + 1
+        sf = jnp.asarray(lr_scale, jnp.float32)
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * jnp.square(g)
+            mh = m2 / bc1
+            vh = v2 / bc2
+            u = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            return (lr * sf * u).astype(p.dtype), m2, v2
+
+        out = _tmap(upd, grads, state["m"], state["v"], params)
+        updates = _tmap(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        m = _tmap(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        v = _tmap(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"m": m, "v": v, "step": step}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# AdamW with int8 block-quantized moments.
+# ---------------------------------------------------------------------------
+
+
+def _block_of(last_dim: int) -> int:
+    """Largest power-of-two divisor of last_dim, capped at Q_BLOCK."""
+    b = 1
+    while b < Q_BLOCK and last_dim % (b * 2) == 0:
+        b *= 2
+    return b
+
+
+def _q8(x):
+    """Block-quantize along the LAST dim: codes keep the leading dims of the
+    parameter, so optimizer-state sharding matches the parameter sharding
+    exactly (no GSPMD reshard of dequantized fp32 moments — the difference is
+    terabytes of all-gather on MoE expert tensors)."""
+    shape = x.shape
+    last = shape[-1] if shape else 1
+    b = _block_of(max(last, 1))
+    xf = x.reshape(*shape[:-1], max(last, 1) // b, b) if shape else x.reshape(1, 1)
+    scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    codes = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return codes, scale[..., 0]
+
+
+def _dq8_static(codes, scale, shape):
+    xf = codes.astype(jnp.float32) * scale[..., None]
+    return xf.reshape(shape) if shape else xf.reshape(())
+
+
+def adamw8bit(lr=3e-4, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1):
+    """AdamW whose m/v live as int8 codes + per-256-block fp32 scales
+    (≈ 2.03 bytes/param of optimizer state vs 8 for fp32 AdamW)."""
+
+    def init(params):
+        def mk(p):
+            codes, scale = _q8(jnp.zeros(p.shape, jnp.float32))
+            return {"codes": codes, "scale": scale}
+
+        return {
+            "m": _tmap(mk, params),
+            "v": _tmap(mk, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr_scale=1.0):
+        step = state["step"] + 1
+        sf = jnp.asarray(lr_scale, jnp.float32)
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, mq, vq, p):
+            g = g.astype(jnp.float32)
+            m = _dq8_static(mq["codes"], mq["scale"], p.shape)
+            v = _dq8_static(vq["codes"], vq["scale"], p.shape)
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * jnp.square(g)
+            u = (m2 / bc1) / (jnp.sqrt(jnp.maximum(v2 / bc2, 0.0)) + eps)
+            u = u + weight_decay * p.astype(jnp.float32)
+            mc, ms = _q8(m2)
+            vc, vs = _q8(v2)
+            return ((lr * sf * u).astype(p.dtype), {"codes": mc, "scale": ms},
+                    {"codes": vc, "scale": vs})
+
+        leaves, treedef = jax.tree.flatten(params)
+        gl = treedef.flatten_up_to(grads)
+        ml = treedef.flatten_up_to(state["m"])
+        vl = treedef.flatten_up_to(state["v"])
+        out = [upd(g, m, v, p) for g, m, v, p in zip(gl, ml, vl, leaves)]
+        updates = treedef.unflatten([o[0] for o in out])
+        m = treedef.unflatten([o[1] for o in out])
+        v = treedef.unflatten([o[2] for o in out])
+        return updates, {"m": m, "v": v, "step": step}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# SGD + momentum.
+# ---------------------------------------------------------------------------
+
+
+def sgdm(lr=0.1, momentum=0.9, weight_decay=0.0):
+    def init(params):
+        return {
+            "mu": _tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr_scale=1.0):
+        sf = jnp.asarray(lr_scale, jnp.float32)
+
+        def upd(g, mu, p):
+            g = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+            mu2 = momentum * mu + g
+            return (lr * sf * mu2).astype(p.dtype), mu2
+
+        out = _tmap(upd, grads, state["mu"], params)
+        updates = _tmap(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        mu = _tmap(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"mu": mu, "step": state["step"] + 1}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(cfg):
+    if cfg.optimizer == "adamw8bit":
+        return adamw8bit(lr=cfg.learning_rate, weight_decay=cfg.weight_decay)
+    if cfg.optimizer == "sgdm":
+        return sgdm(lr=cfg.learning_rate, weight_decay=cfg.weight_decay)
+    return adamw(lr=cfg.learning_rate, weight_decay=cfg.weight_decay)
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), n

@@ -1,0 +1,67 @@
+"""Gradient / payload compression for distributed training at scale.
+
+* ``topk_compress_ef``: top-k sparsification with error feedback (memory) —
+  the classic bandwidth reducer for DP gradient exchange over slow links
+  (the paper's edge setting); convergence-safe via EF residual accumulation.
+* ``int8_quantize``/``int8_dequantize``: per-block int8 quantization used both
+  for compressed all-reduce payloads and for Chaos state-replication shards
+  (see kernels/shard_codec.py for the TPU kernel; this is the jnp reference
+  implementation used on hosts).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Q_BLOCK = 256
+
+
+def topk_compress_ef(grads, residual, k_frac: float = 0.01):
+    """Top-|k| sparsification with error feedback.
+
+    Returns (sparse_grads, new_residual). ``sparse_grads`` has the same
+    pytree/shape as ``grads`` but only the top k fraction (by magnitude) of
+    entries of (grad + residual) are kept; the remainder accumulates into the
+    residual for future steps (error feedback).
+    """
+
+    def one(g, r):
+        g = g.astype(jnp.float32) + r
+        flat = g.reshape(-1)
+        k = max(1, int(flat.size * k_frac))
+        thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+        mask = jnp.abs(g) >= thresh
+        sparse = jnp.where(mask, g, 0.0)
+        return sparse, g - sparse
+
+    out = jax.tree.map(one, grads, residual)
+    sparse = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_r = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return sparse, new_r
+
+
+def ef_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def int8_quantize(x, block: int = Q_BLOCK):
+    """x: any-shape float array → (codes int8 (nb, block), scales fp32 (nb,), meta)."""
+    n = x.size
+    pad = (-n) % block
+    xf = jnp.pad(x.astype(jnp.float32).reshape(-1), (0, pad)).reshape(-1, block)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=1), 1e-12) / 127.0
+    codes = jnp.clip(jnp.round(xf / scale[:, None]), -127, 127).astype(jnp.int8)
+    return codes, scale, (x.shape, x.dtype)
+
+
+def int8_dequantize(codes, scale, meta, block: int = Q_BLOCK):
+    shape, dtype = meta
+    n = 1
+    for s in shape:
+        n *= int(s)
+    xf = codes.astype(jnp.float32) * scale[:, None]
+    return xf.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+def compressed_bytes(codes, scale) -> int:
+    return codes.size + scale.size * 4

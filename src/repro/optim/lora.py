@@ -1,0 +1,80 @@
+"""LoRA adapters — the paper fine-tunes GPT-2 with LoRA (1.7 MiB state,
+§VI-A/E); tiny replication payloads are exactly where Chaos's sub-second
+scale-out shines. Adapters target the 2-D projection matrices of a model
+param tree; base weights stay frozen.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+TARGET_RE = re.compile(r"(wq|wk|wv|wo|w1|w2|w3|wr|wg)$")
+
+
+def _paths(tree, prefix=()):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _paths(v, prefix + (k,))
+    else:
+        yield prefix, tree
+
+
+def lora_targets(params):
+    """Leaf paths eligible for LoRA (2-D mats whose name matches TARGET_RE)."""
+    out = []
+    for path, leaf in _paths(params):
+        if leaf.ndim >= 2 and TARGET_RE.search(path[-1]):
+            out.append(path)
+    return out
+
+
+def lora_init(params, rank: int = 8, key=None, alpha: float = 16.0):
+    """Returns adapters: {path_str: {"a": (in, r), "b": (r, out)}}."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    adapters = {}
+    for i, path in enumerate(lora_targets(params)):
+        leaf = _get(params, path)
+        shp = leaf.shape
+        d_in, d_out = shp[-2], shp[-1]
+        lead = shp[:-2]
+        k = jax.random.fold_in(key, i)
+        adapters["/".join(path)] = {
+            "a": jax.random.normal(k, lead + (d_in, rank), jnp.float32) / math.sqrt(d_in),
+            "b": jnp.zeros(lead + (rank, d_out), jnp.float32),
+        }
+    return adapters, alpha / rank
+
+
+def _get(tree, path):
+    for p in path:
+        tree = tree[p]
+    return tree
+
+
+def _set(tree, path, val):
+    if len(path) == 1:
+        return {**tree, path[0]: val}
+    return {**tree, path[0]: _set(tree[path[0]], path[1:], val)}
+
+
+def lora_apply_delta(params, adapters, scaling: float):
+    """params + scaling * A@B for every adapted leaf (returns new tree)."""
+    out = params
+    for path_str, ab in adapters.items():
+        path = tuple(path_str.split("/"))
+        base = _get(out, path)
+        delta = jnp.einsum("...ir,...ro->...io", ab["a"], ab["b"]) * scaling
+        out = _set(out, path, base + delta.astype(base.dtype))
+    return out
+
+
+def lora_merge(params, adapters, scaling: float):
+    return lora_apply_delta(params, adapters, scaling)
+
+
+def lora_param_bytes(adapters) -> int:
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(adapters))

@@ -1,0 +1,102 @@
+"""Replication engine: pytree ⇄ shard round-trips, manifests, codec."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.replication import (
+    assemble_shards,
+    build_manifest,
+    execute_replication,
+    extract_shards,
+    flatten_state,
+    make_shard_ranges,
+    plan_replication,
+    unflatten_state,
+)
+from repro.core.sharding_alg import NeighborLink
+from repro.optim.compression import int8_dequantize, int8_quantize
+
+
+def _tree(key=0):
+    k = jax.random.PRNGKey(key)
+    return {
+        "params": {
+            "w1": jax.random.normal(k, (17, 33), jnp.float32),
+            "w2": jax.random.normal(jax.random.fold_in(k, 1), (8,), jnp.bfloat16),
+        },
+        "opt": {
+            "m": jnp.zeros((17, 33), jnp.float32),
+            "step": jnp.asarray(7, jnp.int32),
+        },
+    }
+
+
+def test_flatten_roundtrip():
+    t = _tree()
+    buf, manifest = flatten_state(t)
+    assert buf.nbytes == manifest.total_bytes
+    t2 = unflatten_state(buf, manifest)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(t2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_manifest_paths_and_sizes():
+    t = _tree()
+    m = build_manifest(t)
+    paths = {e.path for e in m.entries}
+    assert "params/w1" in paths and "opt/step" in paths
+    assert sum(e.nbytes for e in m.entries) == m.total_bytes
+    # Entries are contiguous and non-overlapping.
+    off = 0
+    for e in m.entries:
+        assert e.offset == off
+        off += e.nbytes
+
+
+@settings(max_examples=50, deadline=None)
+@given(total=st.integers(1, 10_000), s=st.integers(1, 4_000))
+def test_shard_ranges_partition(total, s):
+    rs = make_shard_ranges(total, s)
+    assert rs[0].start == 0 and rs[-1].end == total
+    for a, b in zip(rs, rs[1:]):
+        assert a.end == b.start
+    assert all(r.nbytes <= s for r in rs)
+
+
+def test_shard_extract_assemble_roundtrip():
+    buf = np.arange(1000, dtype=np.uint8)
+    rs = make_shard_ranges(1000, 96)
+    shards = extract_shards(buf, rs)
+    out = assemble_shards(shards, rs, 1000)
+    np.testing.assert_array_equal(buf, out)
+
+
+def test_end_to_end_replication_exact():
+    """A joining node reassembles bit-identical training state from
+    multi-neighbor shard pulls (the paper's stop-free scale-out data path)."""
+    t = _tree()
+    neighbors = {
+        10: NeighborLink(0.001, 1e-8, 0.0),
+        11: NeighborLink(0.002, 2e-8, 0.1),
+        12: NeighborLink(0.0005, 5e-8, 0.0),
+    }
+    plan = plan_replication(t, neighbors)
+    rebuilt, by_source = execute_replication(t, plan)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(rebuilt)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # All sources ship disjoint shards covering the stream.
+    seen = set()
+    for shards in by_source.values():
+        assert not (seen & set(shards))
+        seen |= set(shards)
+    assert seen == {r.index for r in plan.ranges}
+
+
+def test_int8_codec_roundtrip_error():
+    x = np.random.RandomState(0).randn(1000).astype(np.float32) * 3
+    codes, scale, meta = int8_quantize(jnp.asarray(x))
+    back = np.asarray(int8_dequantize(codes, scale, meta))
+    err = np.abs(back - x).max()
+    assert err <= np.abs(x).max() / 127.0 + 1e-6

@@ -1,0 +1,98 @@
+"""End-to-end system tests: the full stack working together — config →
+model → optimizer → data → training (loss decreases) → Chaos scale-out plan
+→ replication → checkpoint → restore → continue training."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import MemoryReplicaStore, load_checkpoint, save_checkpoint
+from repro.configs import SHAPES, get_config, list_configs, ASSIGNED
+from repro.configs.base import ShapeCell
+from repro.core import (
+    Link,
+    NeighborLink,
+    SimCluster,
+    chaos_plan,
+    plan_replication,
+    execute_replication,
+    random_edge_topology,
+)
+from repro.data.synthetic import TokenStream
+from repro.models import build_model
+
+
+def test_all_assigned_archs_registered():
+    known = set(list_configs())
+    assert set(ASSIGNED) <= known
+    assert {"gpt2", "gpt2-medium", "gpt2-large"} <= known  # paper's own models
+
+
+def test_shape_cells_match_assignment():
+    assert SHAPES["train_4k"].seq_len == 4096 and SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768 and SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288 and SHAPES["long_500k"].global_batch == 1
+
+
+def test_long_500k_skip_policy():
+    runs = {a for a in ASSIGNED if get_config(a).supports_cell(SHAPES["long_500k"])[0]}
+    assert runs == {"rwkv6-1.6b", "zamba2-1.2b"}
+
+
+def test_end_to_end_train_scale_checkpoint_restore(tmp_path):
+    """The full story on one device: train → node joins (Chaos plan + real
+    replication of the live state) → keep training → checkpoint → crash →
+    restore → loss continuity."""
+    cfg = dataclasses.replace(get_config("gpt2").reduced(), learning_rate=2e-3)
+    model = build_model(cfg)
+    state = model.init_train_state(jax.random.PRNGKey(0))
+    step = jax.jit(model.make_train_step())
+    stream = TokenStream(vocab=cfg.vocab, seq_len=32, seed=0)
+
+    def batch(i, b=8):
+        return {"tokens": stream.batch(range(i * b, (i + 1) * b))}
+
+    losses = []
+    for i in range(10):
+        state, m = step(state, batch(i))
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-3:]) < np.mean(losses[:3])  # learning
+
+    # --- a node joins: Chaos plans and executes replication of live state ---
+    nbrs = {1: NeighborLink(0.002, 1e-8), 2: NeighborLink(0.001, 2e-8)}
+    plan = plan_replication(state, nbrs)
+    replica, by_source = execute_replication(state, plan)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(replica)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert len([u for u, s in by_source.items() if s]) >= 2  # multi-neighbor
+
+    # --- checkpoint, "crash", restore, continue ---
+    p = save_checkpoint(tmp_path / "sys.ckpt", state)
+    skeleton = jax.tree.map(lambda x: np.zeros(x.shape, x.dtype),
+                            jax.tree.map(np.asarray, state))
+    restored = load_checkpoint(p, skeleton)
+    state2, m2 = step(restored, batch(11))
+    assert np.isfinite(m2["loss"])
+    assert abs(float(m2["loss"]) - losses[-1]) < 1.0  # no reset to scratch
+
+
+def test_simulated_cluster_full_lifecycle():
+    """Protocol-level lifecycle: train → join → link churn → failure."""
+    topo = random_edge_topology(6, seed=2)
+    cl = SimCluster(topo, state_bytes=64 * 2**20, tensor_sizes=[2**20] * 64,
+                    strategy="chaos")
+    cl.train(2)
+    res = cl.scale_out(99, {0: Link(400, 0.01), 2: Link(800, 0.004)})
+    assert res.delay_s > 0 and 99 in cl.topo.active_nodes()
+    r1 = cl.connect_link(99, 3, Link(500, 0.008))
+    assert r1.delay_s < 1e-3
+    r2 = cl.disconnect_link(99, 3)
+    assert r2.delay_s < 1e-3
+    cl.train(1)
+    res_fail = cl.scale_in(99, failure=True)
+    assert res_fail.delay_s < 1e-3
+    assert 99 not in cl.topo.active_nodes()
+    cl.train(1)  # cluster keeps training after the failure
