@@ -4,6 +4,11 @@ Model state sizes follow the paper §VI-A: CV models 178–528 MiB
 (ResNet101 / AlexNet / VGG11), GPT-2 468–3050 MiB, LoRA 1.7 MiB. Sizes are
 fp32 parameter bytes + Adam moments where the paper replicates "model weights
 and optimizer states" (×3 of param bytes).
+
+All stop-free measurements run through the unified churn engine
+(``repro.core.engine``): each scaling primitive is a ChurnEvent replayed
+against the simulated cluster, exactly as scenario traces are. Pollux
+(stop-resume) bypasses replication entirely and keeps its closed-form model.
 """
 from __future__ import annotations
 
@@ -12,6 +17,7 @@ import random
 from pathlib import Path
 
 from repro.core.baselines import make_cluster, run_scale_out
+from repro.core.engine import ChurnEvent, run_trace_sim
 from repro.core.topology import Link, Topology, random_edge_topology
 
 MiB = 1024 * 1024
@@ -58,9 +64,44 @@ def measure_scale_out(strategy: str, n_nodes: int, state_bytes: int,
     cl.train(train_iters)
     new = 1000 + seed
     links = join_links(topo, new, n_links, seed + 7)
-    delay, idle, extra = run_scale_out(cl, strategy, new, links, state_bytes)
-    return {"delay_s": delay, "idle_total_s": sum(idle.values()),
-            "idle_nodes": len(idle)}
+    if strategy == "pollux":  # stop-resume: no replication to pipeline
+        delay, idle, extra = run_scale_out(cl, strategy, new, links, state_bytes)
+        return {"delay_s": delay, "idle_total_s": sum(idle.values()),
+                "idle_nodes": len(idle)}
+    ev = ChurnEvent(t=cl.sim.now, kind="join", node=new,
+                    links={p: (l.bandwidth_mbps, l.latency_s)
+                           for p, l in links.items()})
+    ledger, results = run_trace_sim(cl, [ev], solver_charge_s="measured")
+    res = results[0]
+    return {"delay_s": res.delay_s, "idle_total_s": sum(res.idle_s.values()),
+            "idle_nodes": len(res.idle_s), "replans": res.replans,
+            "ledger": ledger}
+
+
+def measure_primitives(n_nodes: int, state_bytes: int, tensor_sizes,
+                       seed: int = 0, train_iters: int = 1):
+    """Blocking delays of the light primitives (connect-link /
+    disconnect-link / scale-in) via one engine trace per cluster."""
+    topo = random_edge_topology(n_nodes, seed=seed)
+    cl = make_cluster(topo, state_bytes=state_bytes,
+                      tensor_sizes=tensor_sizes, strategy="chaos")
+    cl.train(train_iters)
+    nodes = cl.topo.active_nodes()
+    u, v = nodes[1], nodes[-1]
+    if cl.topo.has_link(u, v):
+        cl.topo.remove_link(u, v)
+    victim = [x for x in nodes if x != cl.scheduler.node][0]
+    t = cl.sim.now
+    events = [
+        ChurnEvent(t=t, kind="link-join", u=u, v=v,
+                   bandwidth_mbps=500.0, latency_s=0.01),
+        ChurnEvent(t=t, kind="link-leave", u=u, v=v),
+        ChurnEvent(t=t, kind="leave", node=victim),
+    ]
+    _, results = run_trace_sim(cl, events, solver_charge_s="measured")
+    return {"connect_link": results[0].delay_s,
+            "disconnect_link": results[1].delay_s,
+            "scale_in": results[2].delay_s}
 
 
 def save(name: str, rows):

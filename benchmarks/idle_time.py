@@ -1,7 +1,10 @@
 """Fig 10 — total GPU idle time across the cluster during each scale-out.
 Pollux blocks everyone for minutes; EDL+'s barrier blocks everyone for the
 replication window; Autoscaling involves every node; Chaos touches only the
-serving neighbors (< 10 s claim)."""
+serving neighbors (< 10 s claim).
+
+Stop-free systems run as join events through the unified ChurnEngine
+(via ``measure_scale_out``); Pollux keeps its stop-resume model."""
 from __future__ import annotations
 
 import numpy as np

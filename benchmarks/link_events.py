@@ -1,13 +1,16 @@
 """Fig 9 + Table I — scale-in / connect-link / disconnect-link blocking
 delays stay under 1 ms regardless of cluster size (they overlap with
-all-reduce and gradient computation, §IV-C)."""
+all-reduce and gradient computation, §IV-C).
+
+Each repeat replays a three-event churn trace (link-join, link-leave,
+leave) through the unified ChurnEngine — the same pipeline scenario traces
+use — and reads the blocking delays off the engine results.
+"""
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import MiB, print_csv, save, tensor_sizes_for
-from repro.core.baselines import make_cluster
-from repro.core.topology import Link, random_edge_topology
+from benchmarks.common import MiB, measure_primitives, print_csv, save, tensor_sizes_for
 
 CLUSTER_SIZES = (6, 8, 10, 12, 16, 24)
 REPEATS = 4
@@ -20,19 +23,9 @@ def run():
     for n in CLUSTER_SIZES:
         per = {"scale_in": [], "connect_link": [], "disconnect_link": []}
         for r in range(REPEATS):
-            topo = random_edge_topology(n, seed=10 * r + n)
-            cl = make_cluster(topo, state_bytes=state, tensor_sizes=sizes,
-                              strategy="chaos")
-            cl.train(1)
-            nodes = cl.topo.active_nodes()
-            u, v = nodes[1], nodes[-1]
-            if cl.topo.has_link(u, v):
-                cl.topo.remove_link(u, v)
-            per["connect_link"].append(
-                cl.connect_link(u, v, Link(500, 0.01)).delay_s)
-            per["disconnect_link"].append(cl.disconnect_link(u, v).delay_s)
-            victim = [x for x in nodes if x != cl.scheduler.node][0]
-            per["scale_in"].append(cl.scale_in(victim).delay_s)
+            delays = measure_primitives(n, state, sizes, seed=10 * r + n)
+            for prim, d in delays.items():
+                per[prim].append(d)
         for prim, vals in per.items():
             rows.append({"cluster": n, "primitive": prim,
                          "delay_ms": round(float(np.mean(vals)) * 1e3, 4),

@@ -1,10 +1,19 @@
 """Fig 7 — scale-out delay: Pollux vs EDL+ vs Autoscaling vs Chaos,
-CV models, clusters growing 6→12 nodes, 4 repeats each."""
+CV models, clusters growing 6→12 nodes, 4 repeats each.
+
+Stop-free systems run as join events through the unified ChurnEngine
+(measured Alg 1+2 solver time on the critical path); Pollux keeps its
+stop-resume closed-form model.
+
+``--smoke`` runs a single small configuration (CI wiring check, <10 s).
+"""
 from __future__ import annotations
+
+import sys
 
 import numpy as np
 
-from benchmarks.common import CV_MODELS, measure_scale_out, print_csv, save, tensor_sizes_for
+from benchmarks.common import CV_MODELS, MiB, measure_scale_out, print_csv, save, tensor_sizes_for
 
 STRATEGIES = [("pollux", "Pollux"), ("single-source", "EDL+"),
               ("multi-source", "Autoscaling"), ("chaos", "Chaos")]
@@ -12,14 +21,18 @@ CLUSTER_SIZES = (6, 8, 10, 12)
 REPEATS = 4
 
 
-def run():
+def run(smoke: bool = False):
+    models = ([("resnet101-smoke", 16 * MiB, 1 * MiB)] if smoke
+              else CV_MODELS)
+    cluster_sizes = (6,) if smoke else CLUSTER_SIZES
+    repeats = 1 if smoke else REPEATS
     rows = []
-    for model, state, typ in CV_MODELS:
+    for model, state, typ in models:
         sizes = tensor_sizes_for(state, typ)
-        for n in CLUSTER_SIZES:
+        for n in cluster_sizes:
             for strat, label in STRATEGIES:
                 ds = [measure_scale_out(strat, n, state, sizes, seed=r)["delay_s"]
-                      for r in range(REPEATS)]
+                      for r in range(repeats)]
                 rows.append({
                     "model": model, "cluster": f"{n} to {n+1}", "system": label,
                     "delay_s": round(float(np.mean(ds)), 3),
@@ -30,15 +43,22 @@ def run():
 
 
 def main():
-    rows = run()
+    smoke = "--smoke" in sys.argv[1:]
+    rows = run(smoke=smoke)
     print_csv("Fig 7: scale-out delay (s)", rows,
               ["model", "cluster", "system", "delay_s", "delay_std"])
     # Paper claims: Pollux > 100 s; Chaos ≈ 1 s and flat/decreasing in size.
     chaos = [r for r in rows if r["system"] == "Chaos"]
     pollux = [r for r in rows if r["system"] == "Pollux"]
-    print(f"derived: chaos_mean={np.mean([r['delay_s'] for r in chaos]):.2f}s "
-          f"pollux_mean={np.mean([r['delay_s'] for r in pollux]):.2f}s")
+    chaos_mean = np.mean([r["delay_s"] for r in chaos])
+    pollux_mean = np.mean([r["delay_s"] for r in pollux])
+    print(f"derived: chaos_mean={chaos_mean:.2f}s pollux_mean={pollux_mean:.2f}s")
+    if smoke:
+        ok = chaos_mean < pollux_mean and np.isfinite(chaos_mean)
+        print("SMOKE_OK" if ok else "SMOKE_FAILED")
+        return 0 if ok else 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -6,6 +6,10 @@ Two recovery tiers (DESIGN.md §7):
   2. AsyncCheckpointer — background-thread disk checkpoints for correlated
      failures; cold restore shown at the end.
 
+The failure + recovery churn itself is a scenario trace replayed through the
+unified ChurnEngine (the same pipeline the simulator uses), not ad-hoc
+scale_in/scale_out calls.
+
     PYTHONPATH=src python examples/self_healing_demo.py
 """
 import os
@@ -21,6 +25,7 @@ import numpy as np
 
 from repro.checkpoint import AsyncCheckpointer, MemoryReplicaStore
 from repro.configs import get_config
+from repro.core.engine import ChurnEvent
 from repro.core.sharding_alg import NeighborLink
 from repro.data.synthetic import TokenStream
 from repro.elastic import ElasticTrainer
@@ -59,8 +64,11 @@ def main():
                   f"(replicas+ckpt pushed in {(time.perf_counter()-t0)*1e3:.0f} ms)")
 
     # ---- tier 1: node failure, in-memory restore ---------------------------------
-    print("\n--- injecting node failure ---")
-    trainer.scale_in(failure=True)
+    print("\n--- injecting node failure (churn-engine trace) ---")
+    trace = [ChurnEvent(t=0.0, kind="node-failure", node=2)]
+    ledger = trainer.replay_scenario(trace, batch_fn=None)
+    for rec in ledger:
+        print(f"  ledger: {rec.kind} {rec.subject} -> {rec.action} {rec.detail}")
     store.drop_holder(1)  # one replica holder died too
     t0 = time.perf_counter()
     restored, step = store.restore(0, available=[2, 3])

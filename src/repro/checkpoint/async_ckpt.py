@@ -1,5 +1,6 @@
 """Disk checkpointing: synchronous and asynchronous (background thread),
-atomic-rename durable, zstd-compressed msgpack container.
+atomic-rename durable, compressed msgpack container (zstd when available,
+stdlib zlib otherwise — the container header records which).
 
 This is the substrate for the Pollux stop-resume baseline (§II-A) *and* the
 cold-recovery tier of our fault-tolerance stack (DESIGN.md §7): Chaos's
@@ -14,23 +15,48 @@ import queue
 import tempfile
 import threading
 import time
+import zlib
 from pathlib import Path
 from typing import Optional
 
 import jax
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:
+    import zstandard as zstd
+except ImportError:  # optional: fall back to stdlib zlib
+    zstd = None
 
 from repro.core.replication import build_manifest, flatten_state, unflatten_state
 
 FORMAT_VERSION = 1
 
 
+def _compress(raw: bytes, level: int):
+    if zstd is not None:
+        return "zstd", zstd.ZstdCompressor(level=level).compress(raw)
+    return "zlib", zlib.compress(raw, level)
+
+
+def _decompress(codec: str, comp: bytes) -> bytes:
+    if codec == "zstd":
+        if zstd is None:
+            raise RuntimeError(
+                "checkpoint was written with zstd but zstandard is not "
+                "installed; install it or rewrite the checkpoint")
+        return zstd.ZstdDecompressor().decompress(comp)
+    if codec == "zlib":
+        return zlib.decompress(comp)
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
+
+
 def _pack(tree, level: int = 3) -> bytes:
     buf, manifest = flatten_state(tree)
+    codec, comp = _compress(buf.tobytes(), level)
     header = {
         "version": FORMAT_VERSION,
+        "codec": codec,
         "entries": [
             {"path": e.path, "shape": list(e.shape), "dtype": e.dtype,
              "offset": e.offset, "nbytes": e.nbytes}
@@ -38,16 +64,16 @@ def _pack(tree, level: int = 3) -> bytes:
         ],
         "total": manifest.total_bytes,
     }
-    payload = msgpack.packb(header) + b"\x00SPLIT\x00" + zstd.ZstdCompressor(
-        level=level).compress(buf.tobytes())
-    return payload
+    return msgpack.packb(header) + b"\x00SPLIT\x00" + comp
 
 
 def _unpack(data: bytes, treedef_source):
     head, _, comp = data.partition(b"\x00SPLIT\x00")
     header = msgpack.unpackb(head)
     assert header["version"] == FORMAT_VERSION
-    raw = np.frombuffer(zstd.ZstdDecompressor().decompress(comp), np.uint8)
+    # Pre-codec checkpoints were always zstd.
+    codec = header.get("codec", "zstd")
+    raw = np.frombuffer(_decompress(codec, comp), np.uint8)
     assert raw.nbytes == header["total"]
     # Rebuild leaves in manifest order; tree structure from the caller's
     # skeleton (checkpoint readers always know the state structure).

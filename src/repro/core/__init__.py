@@ -1,18 +1,33 @@
 """Chaos core: the paper's contribution — multi-neighbor state replication
-with shard scheduling, cluster monitoring, and peer-negotiation autoscaling."""
+with shard scheduling, cluster monitoring, peer-negotiation autoscaling, and
+the unified churn-event engine."""
 from repro.core.sharding_alg import (
     Assignment,
     NeighborLink,
+    auto_greedy_solver,
     binary_search_assignment,
     brute_force_assignment,
-    chaos_plan,
     even_assignment,
     greedy_shard_assignment,
+    greedy_shard_assignment_vec,
+)
+from repro.core.plans import (
+    ReplicationPlan,
+    build_plan,
+    chaos_plan,
     multi_source_plan,
+    plan_assignment,
     single_source_plan,
 )
 from repro.core.topology import Link, Topology, random_edge_topology, pod_topology
-from repro.core.negotiation import ChaosScheduler, SimCluster
+from repro.core.negotiation import ChaosScheduler, InflightScaleOut, SimCluster
+from repro.core.engine import (
+    ChurnEngine,
+    ChurnEvent,
+    EventLedger,
+    SimBackend,
+    run_trace_sim,
+)
 from repro.core.replication import (
     build_manifest,
     execute_replication,
@@ -24,11 +39,16 @@ from repro.core.replication import (
 __all__ = [
     "Assignment",
     "NeighborLink",
+    "auto_greedy_solver",
     "binary_search_assignment",
     "brute_force_assignment",
     "chaos_plan",
     "even_assignment",
     "greedy_shard_assignment",
+    "greedy_shard_assignment_vec",
+    "ReplicationPlan",
+    "build_plan",
+    "plan_assignment",
     "multi_source_plan",
     "single_source_plan",
     "Link",
@@ -36,7 +56,13 @@ __all__ = [
     "random_edge_topology",
     "pod_topology",
     "ChaosScheduler",
+    "InflightScaleOut",
     "SimCluster",
+    "ChurnEngine",
+    "ChurnEvent",
+    "EventLedger",
+    "SimBackend",
+    "run_trace_sim",
     "build_manifest",
     "execute_replication",
     "flatten_state",

@@ -1,0 +1,363 @@
+"""ChurnEngine: one scaling-event pipeline for the whole system.
+
+The paper's claim is not "Chaos handles a scale-out" but "Chaos keeps
+training under *continuous* churn" — joins, leaves, node failures and link
+events arriving while earlier events are still being processed. Before this
+module the repo had two diverging code paths for that protocol (the
+discrete-event ``ChaosScheduler`` handling one event at a time, and the
+real-array ``ElasticTrainer`` with its own ad-hoc handling). The engine
+unifies them:
+
+* ``ChurnEvent``      — one churn occurrence (join / leave / node-failure /
+  link-join / link-leave / link-failure), JSON-serializable; scenario traces
+  (``repro.scenarios``) are just ordered lists of these.
+* ``EventLedger``     — the deterministic record of what the pipeline did
+  with each event. Same seed ⇒ byte-identical ledger (``canonical_bytes``),
+  which is what makes chaotic runs reproducible and diffable.
+* ``ChurnEngine``     — pulls events from any iterable source and drives a
+  pluggable backend. ``SimBackend`` (here) executes them against the
+  discrete-event cluster with **overlapping-event semantics**: a leave or
+  link failure arriving mid-replication cancels the doomed shard streams and
+  re-plans the undelivered bytes instead of crashing or serializing.
+  ``TrainerBackend`` (``repro.elastic.trainer``) replays the *same* trace on
+  real JAX arrays.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.core.negotiation import InflightScaleOut, SimCluster
+from repro.core.topology import Link
+
+EVENT_KINDS = ("join", "leave", "node-failure",
+               "link-join", "link-leave", "link-failure")
+
+
+@dataclass
+class ChurnEvent:
+    """One churn occurrence. ``t`` is scenario time: virtual seconds for the
+    simulator; the trainer backend treats it as ordering only."""
+    t: float
+    kind: str  # one of EVENT_KINDS
+    node: Optional[int] = None  # join / leave / node-failure
+    u: Optional[int] = None  # link events
+    v: Optional[int] = None
+    links: Optional[Dict[int, Tuple[float, float]]] = None  # peer -> (mbps, lat_s)
+    compute_s: float = 1.0
+    bandwidth_mbps: Optional[float] = None  # link-join
+    latency_s: Optional[float] = None
+
+    def __post_init__(self):
+        if self.kind not in EVENT_KINDS:
+            raise ValueError(f"unknown churn event kind {self.kind!r}")
+
+    def to_json(self) -> dict:
+        out = {"t": self.t, "kind": self.kind}
+        if self.node is not None:
+            out["node"] = self.node
+        if self.u is not None:
+            out["u"], out["v"] = self.u, self.v
+        if self.links:
+            out["links"] = {str(p): [bw, lat] for p, (bw, lat)
+                            in sorted(self.links.items())}
+            out["compute_s"] = self.compute_s
+        if self.bandwidth_mbps is not None:
+            out["bandwidth_mbps"] = self.bandwidth_mbps
+            out["latency_s"] = self.latency_s
+        return out
+
+    @classmethod
+    def from_json(cls, d: dict) -> "ChurnEvent":
+        links = None
+        if "links" in d:
+            links = {int(p): (bw, lat) for p, (bw, lat) in d["links"].items()}
+        return cls(t=float(d["t"]), kind=d["kind"], node=d.get("node"),
+                   u=d.get("u"), v=d.get("v"), links=links,
+                   compute_s=float(d.get("compute_s", 1.0)),
+                   bandwidth_mbps=d.get("bandwidth_mbps"),
+                   latency_s=d.get("latency_s"))
+
+    def link_objects(self) -> Dict[int, Link]:
+        return {p: Link(bw, lat) for p, (bw, lat) in (self.links or {}).items()}
+
+
+@dataclass
+class LedgerRecord:
+    seq: int  # event sequence number (trace order); -1 for engine-internal
+    t: float  # scenario time the action took effect
+    kind: str  # event kind, or engine action like "replan"/"ready"/"aborted"
+    subject: Tuple  # node id or (u, v)
+    action: str  # what the pipeline did
+    detail: dict = field(default_factory=dict)
+
+    def to_json(self) -> dict:
+        return {"seq": self.seq, "t": self.t, "kind": self.kind,
+                "subject": list(self.subject), "action": self.action,
+                "detail": self.detail}
+
+
+class EventLedger:
+    """Deterministic, append-only record of pipeline decisions.
+
+    Two runs of the same trace on the same topology produce byte-identical
+    ``canonical_bytes()`` — the reproducibility contract the engine tests
+    pin down. Keep wall-clock measurements out of ``detail``; virtual times
+    and byte counts only.
+    """
+
+    def __init__(self):
+        self.records: List[LedgerRecord] = []
+
+    def append(self, seq: int, t: float, kind: str, subject, action: str,
+               detail: Optional[dict] = None) -> LedgerRecord:
+        if not isinstance(subject, tuple):
+            subject = (subject,)
+        rec = LedgerRecord(seq, t, kind, subject, action, detail or {})
+        self.records.append(rec)
+        return rec
+
+    def __len__(self):
+        return len(self.records)
+
+    def __iter__(self):
+        return iter(self.records)
+
+    def actions(self) -> List[str]:
+        return [r.action for r in self.records]
+
+    def canonical_bytes(self) -> bytes:
+        lines = [json.dumps(r.to_json(), sort_keys=True,
+                            separators=(",", ":")) for r in self.records]
+        return ("\n".join(lines) + "\n").encode()
+
+    def digest(self) -> str:
+        return hashlib.sha256(self.canonical_bytes()).hexdigest()
+
+
+class ChurnEngine:
+    """The event pipeline: pulls churn events from a source, hands them to a
+    backend in scenario-time order, and keeps the ledger + per-event results.
+
+    ``results[seq]`` maps an event's trace position to the protocol result it
+    eventually produced (e.g. a join's ScaleOutResult appears when its
+    replication drains, which may be several events later).
+    """
+
+    def __init__(self, backend):
+        self.backend = backend
+        self.ledger = EventLedger()
+
+    @property
+    def results(self) -> Dict[int, object]:
+        return self.backend.results
+
+    def run(self, events: Iterable[ChurnEvent]) -> EventLedger:
+        seq_events = sorted(enumerate(events), key=lambda p: (p[1].t, p[0]))
+        for seq, ev in seq_events:
+            self.backend.advance_to(ev.t, self.ledger)
+            self.backend.handle(seq, ev, self.ledger)
+        self.backend.drain(self.ledger)
+        return self.ledger
+
+
+# ---------------------------------------------------------------------------
+# Simulation backend: overlapping events against the discrete-event cluster.
+# ---------------------------------------------------------------------------
+
+
+class SimBackend:
+    """Executes churn events on a :class:`SimCluster` with overlap semantics.
+
+    A join starts an :class:`InflightScaleOut` and the engine moves on; the
+    replication drains in virtual time while later events are dispatched. A
+    leave / node-failure / link event that touches an in-flight replication
+    (a source node, a route link, or the joining node itself) triggers a
+    re-plan of the undelivered bytes — or an abort when the joining node has
+    nothing left to pull from.
+    """
+
+    #: virtual seconds charged per Alg 1+2 solve under the engine. A fixed
+    #: charge (not the measured wall time) is what makes same-seed replays
+    #: byte-identical; pass ``solver_charge_s="measured"`` (benchmarks) to
+    #: keep the paper's measured-solver-on-critical-path semantics.
+    DEFAULT_SOLVER_CHARGE_S = 1e-3
+
+    def __init__(self, cluster: SimCluster, *, min_active: int = 2,
+                 solver_charge_s=DEFAULT_SOLVER_CHARGE_S):
+        self.cluster = cluster
+        self.min_active = min_active
+        self.inflight: List[InflightScaleOut] = []
+        self._inflight_seq: Dict[int, int] = {}  # new_node -> event seq
+        self.results: Dict[int, object] = {}
+        cluster.scheduler.solver_time_model = (
+            None if solver_charge_s == "measured" else float(solver_charge_s))
+
+    # -- engine protocol -----------------------------------------------------
+
+    def advance_to(self, t: float, ledger: EventLedger):
+        sim = self.cluster.sim
+        if t > sim.now:
+            sim.run(until=t)
+        self._pump(ledger)
+
+    def handle(self, seq: int, ev: ChurnEvent, ledger: EventLedger):
+        dispatch = {
+            "join": self._on_join,
+            "leave": self._on_leave,
+            "node-failure": self._on_leave,
+            "link-join": self._on_link_join,
+            "link-leave": self._on_link_down,
+            "link-failure": self._on_link_down,
+        }
+        dispatch[ev.kind](seq, ev, ledger)
+
+    def drain(self, ledger: EventLedger):
+        self.cluster.sim.run()
+        self._pump(ledger)
+
+    # -- helpers -------------------------------------------------------------
+
+    @property
+    def sched(self):
+        return self.cluster.scheduler
+
+    @property
+    def topo(self):
+        return self.cluster.topo
+
+    def _pump(self, ledger: EventLedger):
+        """Finalize replications whose transfers have drained."""
+        for fl in list(self.inflight):
+            if fl.aborted:
+                self.inflight.remove(fl)
+                continue
+            if fl.complete:
+                res = self.sched.finish_scale_out(fl)
+                seq = self._inflight_seq.pop(fl.new_node, -1)
+                self.results[seq] = res
+                ledger.append(seq, res.timeline["ready"], "join",
+                              fl.new_node, "ready", {
+                                  "delay_s": res.delay_s,
+                                  "replication_s": res.replication_s,
+                                  "replans": res.replans,
+                                  "plan": fl.plan.summary(),
+                              })
+                self.inflight.remove(fl)
+
+    def _replan_touched(self, ledger: EventLedger, *, node=None, link=None):
+        """Re-plan (or abort) in-flight replications invalidated by churn."""
+        for fl in list(self.inflight):
+            touched = ((node is not None and fl.uses_node(node))
+                       or (link is not None and fl.uses_link(*link)))
+            if not touched:
+                continue
+            seq = self._inflight_seq.get(fl.new_node, -1)
+            if self.sched.replan_scale_out(fl):
+                ledger.append(seq, self.cluster.sim.now, "join", fl.new_node,
+                              "replanned", {
+                                  "replans": fl.replans,
+                                  "delivered_bytes": fl.delivered_bytes(),
+                                  "plan": fl.plan.summary(),
+                              })
+            else:
+                self.inflight.remove(fl)
+                self._inflight_seq.pop(fl.new_node, None)
+                ledger.append(seq, self.cluster.sim.now, "join", fl.new_node,
+                              "aborted", {"delivered_bytes": fl.delivered_bytes()})
+
+    # -- event handlers -------------------------------------------------------
+
+    def _on_join(self, seq: int, ev: ChurnEvent, ledger: EventLedger):
+        node = ev.node
+        info = self.topo.nodes.get(node)
+        if info is not None and info.state in ("active", "standby"):
+            ledger.append(seq, ev.t, ev.kind, node, "skipped-already-member")
+            return
+        links = {p: l for p, l in ev.link_objects().items()
+                 if p in self.topo.nodes
+                 and self.topo.nodes[p].state == "active" and p != node
+                 and self.topo.has_path(self.sched.node, p)}
+        if not links:
+            ledger.append(seq, ev.t, ev.kind, node, "skipped-no-active-peers")
+            return
+        fl = self.sched.begin_scale_out(node, links, self.cluster.state_bytes,
+                                        self.cluster.tensor_sizes,
+                                        compute_s=ev.compute_s)
+        self.inflight.append(fl)
+        self._inflight_seq[node] = seq
+        ledger.append(seq, ev.t, ev.kind, node, "scale-out-started", {
+            "peers": sorted(links),
+            "plan": fl.plan.summary(),
+        })
+
+    def _on_leave(self, seq: int, ev: ChurnEvent, ledger: EventLedger):
+        node = ev.node
+        failure = ev.kind == "node-failure"
+        # The joining node itself dying aborts its replication outright.
+        for fl in list(self.inflight):
+            if fl.new_node == node:
+                self.sched.abort_scale_out(fl, failure=failure)
+                self.inflight.remove(fl)
+                s = self._inflight_seq.pop(node, -1)
+                ledger.append(s, ev.t, "join", node, "aborted",
+                              {"delivered_bytes": fl.delivered_bytes()})
+                ledger.append(seq, ev.t, ev.kind, node, "aborted-inflight-join")
+                return
+        info = self.topo.nodes.get(node)
+        if info is None or info.state != "active":
+            ledger.append(seq, ev.t, ev.kind, node, "skipped-not-active")
+            return
+        if node == self.sched.node:
+            ledger.append(seq, ev.t, ev.kind, node, "skipped-scheduler-node")
+            return
+        if len(self.topo.active_nodes()) <= self.min_active:
+            ledger.append(seq, ev.t, ev.kind, node, "skipped-min-cluster")
+            return
+        res = self.sched.scale_in(node, failure=failure)
+        self.results[seq] = res
+        ledger.append(seq, ev.t, ev.kind, node,
+                      "node-failed" if failure else "scaled-in",
+                      {"blocking_s": res.delay_s})
+        # The departure may have severed in-flight shard streams.
+        self._replan_touched(ledger, node=node)
+
+    def _on_link_join(self, seq: int, ev: ChurnEvent, ledger: EventLedger):
+        u, v = ev.u, ev.v
+        if u not in self.topo.nodes or v not in self.topo.nodes:
+            ledger.append(seq, ev.t, ev.kind, (u, v), "skipped-unknown-node")
+            return
+        if self.topo.has_link(u, v):
+            ledger.append(seq, ev.t, ev.kind, (u, v), "skipped-link-exists")
+            return
+        link = Link(ev.bandwidth_mbps or 100.0, ev.latency_s or 0.01)
+        res = self.sched.connect_link(u, v, link)
+        self.results[seq] = res
+        ledger.append(seq, ev.t, ev.kind, (u, v), "link-connected",
+                      {"blocking_s": res.delay_s})
+
+    def _on_link_down(self, seq: int, ev: ChurnEvent, ledger: EventLedger):
+        u, v = ev.u, ev.v
+        failure = ev.kind == "link-failure"
+        if not self.topo.has_link(u, v):
+            ledger.append(seq, ev.t, ev.kind, (u, v), "skipped-no-link")
+            return
+        res = self.sched.disconnect_link(u, v, failure=failure)
+        self.results[seq] = res
+        ledger.append(seq, ev.t, ev.kind, (u, v),
+                      "link-failed" if failure else "link-disconnected",
+                      {"blocking_s": res.delay_s})
+        self._replan_touched(ledger, link=(u, v))
+
+
+def run_trace_sim(cluster: SimCluster, events: Iterable[ChurnEvent],
+                  *, min_active: int = 2,
+                  solver_charge_s=SimBackend.DEFAULT_SOLVER_CHARGE_S,
+                  ) -> Tuple[EventLedger, Dict[int, object]]:
+    """Replay a churn trace through the engine on a simulated cluster."""
+    engine = ChurnEngine(SimBackend(cluster, min_active=min_active,
+                                    solver_charge_s=solver_charge_s))
+    ledger = engine.run(events)
+    return ledger, engine.results

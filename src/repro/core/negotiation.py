@@ -15,15 +15,13 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.monitor import ClusterMonitor, MEASURE_SECONDS
-from repro.core.simulator import CONTROL_MSG_BYTES, Network, Sim, TrainingSession
-from repro.core.sharding_alg import (
-    NeighborLink,
-    ReplicationPlan,
-    binary_search_assignment,
-    chaos_even_plan,
-    chaos_plan,
-    multi_source_plan,
-    single_source_plan,
+from repro.core.plans import ReplicationPlan, build_plan, trim_tensor_sizes
+from repro.core.simulator import (
+    CONTROL_MSG_BYTES,
+    Network,
+    Sim,
+    TrainingSession,
+    TransferHandle,
 )
 from repro.core.topology import Link, Topology
 
@@ -39,6 +37,7 @@ class ScaleOutResult:
     idle_s: Dict[int, float]  # per-node idle attributable to this event
     plan: ReplicationPlan
     timeline: Dict[str, float]
+    replans: int = 0  # times churn invalidated the in-flight replication
 
 
 @dataclass
@@ -46,6 +45,61 @@ class PrimitiveResult:
     delay_s: float  # blocking (non-overlapped) portion — Table I semantics
     wall_s: float  # full protocol wall time incl. hidden parts
     timeline: Dict[str, float]
+
+
+@dataclass
+class TransferRecord:
+    """One source→new-node shard stream of an in-flight replication."""
+    source: int
+    nbytes: int
+    route: List[int]
+    handle: TransferHandle
+    gen: int  # 0 for the original plan, 1+ per re-plan
+
+
+@dataclass
+class InflightScaleOut:
+    """A scale-out whose state replication is still on the wire.
+
+    The churn engine holds these between events: a leave / link-failure
+    arriving mid-replication cancels the affected streams and re-plans the
+    undelivered bytes from the surviving neighbors instead of crashing or
+    serializing the events (§IV-C overlap, taken to its conclusion)."""
+    new_node: int
+    t0: float
+    state_bytes: int
+    tensor_sizes: List[int]
+    neighbor_ids: List[int]
+    plan: ReplicationPlan  # latest generation
+    sync: Dict[int, float]
+    solver_s: float
+    t_transfers_start: float
+    timeline: Dict[str, float]
+    transfers: List[TransferRecord] = field(default_factory=list)
+    replans: int = 0
+    aborted: bool = False
+
+    def delivered_bytes(self) -> int:
+        return sum(r.nbytes for r in self.transfers if r.handle.done)
+
+    def pending(self) -> List[TransferRecord]:
+        return [r for r in self.transfers
+                if not r.handle.cancelled and not r.handle.done]
+
+    @property
+    def complete(self) -> bool:
+        return not self.aborted and not self.pending()
+
+    def uses_node(self, node: int) -> bool:
+        return any(node == r.source or node in r.route for r in self.pending())
+
+    def uses_link(self, u: int, v: int) -> bool:
+        key = (min(u, v), max(u, v))
+        for r in self.pending():
+            for a, b in zip(r.route, r.route[1:]):
+                if (min(a, b), max(a, b)) == key:
+                    return True
+        return False
 
 
 class ChaosScheduler:
@@ -64,6 +118,10 @@ class ChaosScheduler:
         self.monitor.on_node_failure = lambda n: self.scale_in(n, failure=True)
         self.monitor.on_link_failure = lambda u, v: self.disconnect_link(u, v, failure=True)
         self.sync_policy_version = 0
+        # None ⇒ charge the *measured* Alg 1+2 wall time to the virtual clock
+        # (paper Table I semantics). The churn engine sets a fixed charge so
+        # same-seed replays produce byte-identical ledgers.
+        self.solver_time_model: Optional[float] = None
 
     # -- helpers ---------------------------------------------------------------
 
@@ -72,6 +130,10 @@ class ChaosScheduler:
             return 2e-6
         if self.topo.has_link(u, v):
             return 2 * self.topo.link(u, v).latency_s
+        if not self.topo.has_path(u, v):
+            # Partitioned overlay: no ack can arrive; the primitive proceeds
+            # on heartbeat-timeout semantics (no control exchange charged).
+            return 0.0
         path = self.topo.shortest_path(u, v, CONTROL_MSG_BYTES)
         prop, _ = self.topo.path_delay_per_byte(path)
         return 2 * prop
@@ -83,10 +145,25 @@ class ChaosScheduler:
         return POLICY_SWAP_S
 
     # -- scale-out (Fig 4a / Fig 5a) --------------------------------------------
+    #
+    # The protocol is split into begin / finish phases so the churn engine can
+    # overlap it with later events: ``begin_scale_out`` runs negotiation,
+    # measurement, planning and *schedules* the shard transfers, returning an
+    # InflightScaleOut; ``finish_scale_out`` finalizes once the transfers have
+    # drained. ``scale_out`` is the one-shot convenience wrapper (equivalent
+    # to the pre-engine behavior).
 
     def scale_out(self, new_node: int, links: Dict[int, Link],
                   state_bytes: int, tensor_sizes: Sequence[int],
                   compute_s: float = 1.0) -> ScaleOutResult:
+        fl = self.begin_scale_out(new_node, links, state_bytes, tensor_sizes,
+                                  compute_s=compute_s)
+        self.sim.run()  # drain the scheduled transfers
+        return self.finish_scale_out(fl)
+
+    def begin_scale_out(self, new_node: int, links: Dict[int, Link],
+                        state_bytes: int, tensor_sizes: Sequence[int],
+                        compute_s: float = 1.0) -> InflightScaleOut:
         t0 = self.sim.now
         timeline = {"request": t0}
 
@@ -115,10 +192,13 @@ class ChaosScheduler:
         sync = {u: max(0.0, ar_done[u] - t_measured) + self.session.node_sync_skew(u)
                 for u in neighbor_ids}
 
-        # 5. Plan generation (Algorithm 1 + 2) — wall time measured for real.
+        # 5. Plan generation (Algorithm 1 + 2) — wall time measured for real
+        #    (or a fixed deterministic charge under the churn engine).
         wall0 = _time.perf_counter()
-        plan = self._make_plan(new_node, state_bytes, tensor_sizes, sync)
-        solver_s = _time.perf_counter() - wall0
+        plan = build_plan(self.strategy, self.topo, new_node, state_bytes,
+                          tensor_sizes, sync)
+        wall = _time.perf_counter() - wall0
+        solver_s = wall if self.solver_time_model is None else self.solver_time_model
         t_plan = t_measured + solver_s
         timeline["plan_ready"] = t_plan
 
@@ -127,43 +207,85 @@ class ChaosScheduler:
                            for u in list(plan.sources) + [new_node]), default=0.0)
         t_transfers_start = t_plan + policy_dist
 
-        done_at = {"t": t_transfers_start}
+        fl = InflightScaleOut(new_node, t0, int(state_bytes),
+                              list(tensor_sizes), neighbor_ids, plan, sync,
+                              solver_s, t_transfers_start, timeline)
+        self._schedule_transfers(fl, plan, t_transfers_start, sync, gen=0)
+        return fl
 
-        def mk_done(u):
-            def cb(tdone):
-                done_at["t"] = max(done_at["t"], tdone)
-            return cb
-
-        # Schedule transfers at their per-source start times.
+    def _schedule_transfers(self, fl: InflightScaleOut, plan: ReplicationPlan,
+                            t_start: float, sync: Dict[int, float], gen: int):
         for u, nbytes in plan.sources.items():
             route = plan.routes[u]
-            start = t_transfers_start + sync.get(u, 0.0)
-            self.sim.at(start, lambda u=u, nbytes=nbytes, route=route:
-                        self.net.transfer(route, nbytes, mk_done(u)))
-        self.sim.run()  # drain the scheduled transfers
-        t_state_done = done_at["t"]
-        timeline["state_replicated"] = t_state_done
+            handle = TransferHandle()
+            fl.transfers.append(TransferRecord(u, int(nbytes), route, handle, gen))
+            start = t_start + sync.get(u, 0.0)
+
+            def launch(route=route, nbytes=nbytes, handle=handle):
+                if handle.cancelled:  # invalidated before the bytes moved
+                    return
+                self.net.transfer(route, nbytes, lambda t: None, handle=handle)
+
+            self.sim.at(start, launch)
+
+    def finish_scale_out(self, fl: InflightScaleOut) -> ScaleOutResult:
+        """Finalize a drained replication: install state + policy, activate."""
+        done_ts = [r.handle.done_t for r in fl.transfers if r.handle.done]
+        t_state_done = max(done_ts, default=fl.t_transfers_start)
+        fl.timeline["state_replicated"] = t_state_done
 
         # 7. New node installs state + policy, joins the next iteration.
         t_ready = t_state_done + self._update_sync_policy()
-        timeline["ready"] = t_ready
-        self.monitor.activate(new_node)
+        fl.timeline["ready"] = t_ready
+        self.monitor.activate(fl.new_node)
 
-        delay = t_ready - t0
-        idle = self._idle_for_scaleout(plan, t0, t_ready, neighbor_ids)
-        return ScaleOutResult(delay, t_state_done - t_transfers_start, solver_s,
-                              idle, plan, timeline)
+        delay = t_ready - fl.t0
+        idle = self._idle_for_scaleout(fl.plan, fl.t0, t_ready, fl.neighbor_ids)
+        return ScaleOutResult(delay, t_state_done - fl.t_transfers_start,
+                              fl.solver_s, idle, fl.plan, fl.timeline,
+                              replans=fl.replans)
 
-    def _make_plan(self, new_node, state_bytes, tensor_sizes, sync) -> ReplicationPlan:
-        if self.strategy == "chaos":
-            return chaos_plan(self.topo, new_node, state_bytes, tensor_sizes, sync)
-        if self.strategy == "chaos-even":
-            return chaos_even_plan(self.topo, new_node, state_bytes, tensor_sizes, sync)
-        if self.strategy == "single-source":
-            return single_source_plan(self.topo, new_node, state_bytes, sync)
-        if self.strategy == "multi-source":
-            return multi_source_plan(self.topo, new_node, state_bytes, sync)
-        raise ValueError(self.strategy)
+    def replan_scale_out(self, fl: InflightScaleOut) -> bool:
+        """Churn invalidated part of an in-flight replication: cancel the
+        affected streams and re-plan the undelivered bytes over the current
+        topology. Returns False (and aborts) when the joining node has no
+        surviving neighbors to pull from."""
+        now = self.sim.now
+        for r in fl.pending():
+            r.handle.cancel()
+        remaining = fl.state_bytes - fl.delivered_bytes()
+        if remaining <= 0:
+            return True  # everything already on the new node
+        if not self.topo.neighbors(fl.new_node):
+            self.abort_scale_out(fl)
+            return False
+
+        wall0 = _time.perf_counter()
+        sizes = trim_tensor_sizes(fl.tensor_sizes, remaining)
+        plan = build_plan(self.strategy, self.topo, fl.new_node, remaining,
+                          sizes, sync=None)
+        wall = _time.perf_counter() - wall0
+        solver_s = wall if self.solver_time_model is None else self.solver_time_model
+        fl.solver_s += solver_s
+
+        # Re-negotiation: scheduler redistributes policies to the new sources.
+        policy_dist = max((self._control_rtt(self.node, u) / 2
+                           for u in list(plan.sources) + [fl.new_node]),
+                          default=0.0)
+        t_start = now + solver_s + policy_dist
+        fl.replans += 1
+        fl.plan = plan
+        fl.timeline[f"replanned_{fl.replans}"] = t_start
+        self._schedule_transfers(fl, plan, t_start, {}, gen=fl.replans)
+        return True
+
+    def abort_scale_out(self, fl: InflightScaleOut, failure: bool = True):
+        """The joining node died or lost all its links mid-replication."""
+        for r in fl.pending():
+            r.handle.cancel()
+        fl.aborted = True
+        if fl.new_node in self.topo.nodes:
+            self.monitor.register_leave(fl.new_node, failure=failure)
 
     def _idle_for_scaleout(self, plan, t0, t_ready, neighbors) -> Dict[int, float]:
         """Idle attribution per §VI-C:

@@ -1,0 +1,182 @@
+"""The one replication-plan path (paper §III + §VI-F ablations).
+
+Every component that turns "node X needs the training state" into "which
+source sends which bytes over which route" goes through this module: the
+simulator scheduler (``negotiation.py``), the churn engine (``engine.py``),
+the real-array elastic trainer (``elastic/trainer.py`` via
+``replication.plan_replication``), and the benchmarks. Before the refactor
+each of those carried its own copy of the plan-construction logic.
+
+``plan_assignment`` is the canonical Algorithm 1+2 entry point; it dispatches
+the greedy inner solver to the vectorized implementation on wide instances
+(``auto_greedy_solver``), which is what keeps planning sub-millisecond at
+hundreds of neighbors.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.sharding_alg import (
+    Assignment,
+    NeighborLink,
+    auto_greedy_solver,
+    binary_search_assignment,
+    even_assignment,
+)
+from repro.core.topology import Topology
+
+
+@dataclass
+class ReplicationPlan:
+    """What each source sends to the new node, with predicted delay."""
+    strategy: str
+    sources: Dict[int, int]  # source node -> bytes to send
+    routes: Dict[int, List[int]]  # source node -> path to new node
+    predicted_delay_s: float
+
+    def summary(self) -> dict:
+        """Deterministic dict for event ledgers (sorted keys, ints/floats)."""
+        return {
+            "strategy": self.strategy,
+            "sources": {str(u): int(b) for u, b in sorted(self.sources.items())},
+            "predicted_delay_s": float(self.predicted_delay_s),
+        }
+
+
+def plan_assignment(
+    tensor_sizes: Sequence[int], neighbors: Dict[int, NeighborLink], **kw
+) -> Assignment:
+    """Algorithm 1 over the auto-dispatched Algorithm 2 (heap or vectorized —
+    identical results, different wall time)."""
+    return binary_search_assignment(tensor_sizes, neighbors,
+                                    solver=auto_greedy_solver, **kw)
+
+
+def measured_neighbors(
+    topo: Topology, new_node: int, sync: Optional[Dict[int, float]] = None
+) -> Dict[int, NeighborLink]:
+    """Monitor measurement of direct neighbors (iperf stand-in, §IV-A)."""
+    out = {}
+    for u in topo.neighbors(new_node):
+        l = topo.link(u, new_node)
+        out[u] = NeighborLink(l.latency_s, l.trans_delay_per_byte,
+                              (sync or {}).get(u, 0.0))
+    return out
+
+
+def chaos_plan(
+    topo: Topology, new_node: int, state_bytes: int,
+    tensor_sizes: Sequence[int], sync: Optional[Dict[int, float]] = None,
+    solver=plan_assignment,
+) -> ReplicationPlan:
+    """Multi-neighbor replication with Algorithm 1+2 shard scheduling."""
+    nb = measured_neighbors(topo, new_node, sync)
+    asg = solver(tensor_sizes, nb)
+    sources = {u: len(ks) * asg.shard_size for u, ks in
+               asg.shards_per_neighbor.items() if ks}
+    routes = {u: [u, new_node] for u in sources}
+    return ReplicationPlan("chaos", sources, routes, asg.completion_s)
+
+
+def chaos_even_plan(topo, new_node, state_bytes, tensor_sizes, sync=None):
+    """Multi-neighbor replication with *even* shards (ablation variant)."""
+    nb = measured_neighbors(topo, new_node, sync)
+    k = len(nb)
+    s = math.ceil(state_bytes / k)
+    asg = even_assignment(k, s, nb)
+    sources = {u: len(ks) * s for u, ks in asg.shards_per_neighbor.items() if ks}
+    return ReplicationPlan("multi-neighbor-even", sources,
+                           {u: [u, new_node] for u in sources}, asg.completion_s)
+
+
+def single_source_plan(
+    topo: Topology, new_node: int, state_bytes: int, sync=None
+) -> ReplicationPlan:
+    """EDL+ [13]/Elan [14]: pull everything from the fastest neighbor."""
+    nb = measured_neighbors(topo, new_node, sync)
+    if not nb:
+        raise ValueError("new node has no neighbors")
+    best_u, best_t = None, float("inf")
+    for u, l in nb.items():
+        t = l.prop_s + l.sync_s + state_bytes * l.trans_s_per_byte
+        if t < best_t:
+            best_u, best_t = u, t
+    return ReplicationPlan("single-source", {best_u: state_bytes},
+                           {best_u: [best_u, new_node]}, best_t)
+
+
+def multi_source_plan(
+    topo: Topology, new_node: int, state_bytes: int, sync=None
+) -> ReplicationPlan:
+    """Autoscaling [18]: even shards from ALL active nodes, routed along
+    shortest paths — multi-hop forwards included (Fig 1c pathology)."""
+    others = [n for n in topo.active_nodes()
+              if n != new_node and topo.has_path(n, new_node)]
+    if not others:
+        raise ValueError("no sources")
+    share = math.ceil(state_bytes / len(others))
+    sources, routes = {}, {}
+    link_load: Dict[Tuple[int, int], float] = {}
+    worst_path = 0.0
+    for u in others:
+        path = topo.shortest_path(u, new_node, share)
+        prop, trans = topo.path_delay_per_byte(path)
+        sources[u] = share
+        routes[u] = path
+        worst_path = max(worst_path, prop + share * trans + (sync or {}).get(u, 0.0))
+        for a, b in zip(path, path[1:]):
+            key = (min(a, b), max(a, b))
+            link_load[key] = link_load.get(key, 0.0) + share
+    # Multi-hop routes serialize on shared links (Fig 1c): the completion time
+    # is bounded below by the most-loaded link's drain time.
+    bottleneck = max(
+        (load * topo.link(a, b).trans_delay_per_byte
+         for (a, b), load in link_load.items()),
+        default=0.0,
+    )
+    return ReplicationPlan("multi-source", sources, routes,
+                           max(worst_path, bottleneck))
+
+
+STRATEGY_BUILDERS = {
+    "chaos": chaos_plan,
+    "chaos-even": chaos_even_plan,
+    "single-source": single_source_plan,
+    "multi-source": multi_source_plan,
+}
+
+
+def build_plan(
+    strategy: str, topo: Topology, new_node: int, state_bytes: int,
+    tensor_sizes: Sequence[int], sync: Optional[Dict[int, float]] = None,
+) -> ReplicationPlan:
+    """Strategy-dispatched plan construction — the single entry point used by
+    the scheduler, the churn engine, and the benchmarks."""
+    if strategy in ("chaos",):
+        return chaos_plan(topo, new_node, state_bytes, tensor_sizes, sync)
+    if strategy == "chaos-even":
+        return chaos_even_plan(topo, new_node, state_bytes, tensor_sizes, sync)
+    if strategy == "single-source":
+        return single_source_plan(topo, new_node, state_bytes, sync)
+    if strategy == "multi-source":
+        return multi_source_plan(topo, new_node, state_bytes, sync)
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+def trim_tensor_sizes(tensor_sizes: Sequence[int], nbytes: int) -> List[int]:
+    """Prefix of ``tensor_sizes`` covering exactly ``nbytes`` (last entry
+    truncated). Used when re-planning an interrupted replication: only the
+    not-yet-delivered bytes need new sources."""
+    out: List[int] = []
+    left = int(nbytes)
+    for t in tensor_sizes:
+        if left <= 0:
+            break
+        take = min(int(t), left)
+        out.append(take)
+        left -= take
+    if left > 0:  # caller asked for more than the manifest holds
+        out.append(left)
+    return out

@@ -18,11 +18,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
-from repro.core.sharding_alg import (
-    Assignment,
-    NeighborLink,
-    binary_search_assignment,
-)
+from repro.core.plans import plan_assignment
+from repro.core.sharding_alg import Assignment, NeighborLink
 
 
 @dataclass(frozen=True)
@@ -139,7 +136,7 @@ def plan_replication(tree, neighbors: Dict[int, NeighborLink]) -> ReplicationExe
     """Plan shard pulls for a full training-state pytree (identical across
     sources — synchronous DP, the paper's setting)."""
     buf_manifest = build_manifest(tree)
-    asg = binary_search_assignment(buf_manifest.tensor_sizes, neighbors)
+    asg = plan_assignment(buf_manifest.tensor_sizes, neighbors)
     ranges = make_shard_ranges(buf_manifest.total_bytes, asg.shard_size)
     per_source = {
         u: sum(ranges[k].nbytes for k in ks if k < len(ranges))

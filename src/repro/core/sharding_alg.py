@@ -5,16 +5,22 @@ baselines of §VI-F).
 Objective (P1, Eq. 4):  min over (s, x)  of  max_u  t_u + τ_u^sync,
   t_u = t_u^prop + s · t_u^trans · |K_u|.
 
-* ``greedy_shard_assignment``  — Algorithm 2 (least-estimated-load greedy ==
-  LPT for P∥C_max; Graham bound (4/3 − 1/(3|U|))·OPT).
-* ``binary_search_assignment`` — Algorithm 1 (binary search over shard size s,
-  calling Algorithm 2 per candidate; quasi-monotone objective).
-* ``even_assignment``          — equal split (the paper's upper-bound baseline).
-* ``brute_force_assignment``   — exact optimum by exhaustive search (the
+* ``greedy_shard_assignment``      — Algorithm 2 (least-estimated-load greedy
+  == LPT for P∥C_max; Graham bound (4/3 − 1/(3|U|))·OPT). Heap reference.
+* ``greedy_shard_assignment_vec``  — the same algorithm solved in closed form
+  with NumPy (threshold search over completion times); exact heap equivalence,
+  sub-millisecond at hundreds of neighbors.
+* ``binary_search_assignment``     — Algorithm 1 (binary search over shard
+  size s, calling Algorithm 2 per candidate; quasi-monotone objective).
+* ``even_assignment``              — equal split (the paper's upper-bound baseline).
+* ``brute_force_assignment``       — exact optimum by exhaustive search (the
   paper's lower-bound baseline; small K·|U| only).
-* ``single_source_plan``       — EDL+ [13]+[14]: full state from fastest neighbor.
-* ``multi_source_plan``        — Autoscaling [18]: even shards from *all* nodes,
-  multi-hop shortest-path routing (redundant-transfer pathology of Fig 1c).
+
+Whole-plan construction (``ReplicationPlan``, ``chaos_plan``,
+``single_source_plan``, ``multi_source_plan``, …) lives in
+``repro.core.plans`` — the one plans path shared by the simulator scheduler,
+the elastic trainer, and the benchmarks. The names are still importable from
+here for backwards compatibility (lazy re-export below).
 """
 from __future__ import annotations
 
@@ -24,6 +30,8 @@ import itertools
 import math
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.core.topology import Topology
 
@@ -72,23 +80,166 @@ def greedy_shard_assignment(
     """Paper Algorithm 2. l_u ← prop_u + sync_u (initial term); repeatedly give
     the next shard to argmin_u (l_u + s·trans_u) and bump l_u (update term).
 
-    O(K log |U|) with a heap.
+    O(K log |U|) with a heap. The priority of neighbor u's c-th shard is
+    computed as ``base_u + c·inc_u`` (one multiply) rather than by repeated
+    addition, so the vectorized solver below reproduces the exact same
+    floating-point values — and therefore the exact same assignment.
     """
     if not neighbors:
         raise ValueError("no neighbors to pull from")
-    loads = {u: l.prop_s + l.sync_s for u, l in neighbors.items()}
+    base = {u: l.prop_s + l.sync_s for u, l in neighbors.items()}
     inc = {u: s * l.trans_s_per_byte for u, l in neighbors.items()}
-    heap = [(loads[u] + inc[u], u) for u in neighbors]
+    heap = [(base[u] + inc[u], u, 1) for u in neighbors]
     heapq.heapify(heap)
     shards: Dict[int, List[int]] = {u: [] for u in neighbors}
     for k in range(n_shards):
-        est, u = heapq.heappop(heap)
+        est, u, c = heapq.heappop(heap)
         shards[u].append(k)
-        loads[u] = est
-        heapq.heappush(heap, (loads[u] + inc[u], u))
+        heapq.heappush(heap, (base[u] + (c + 1) * inc[u], u, c + 1))
     counts = {u: len(v) for u, v in shards.items()}
     worst, per = completion_time(counts, s, neighbors)
     return Assignment(s, shards, worst, per)
+
+
+def greedy_shard_assignment_vec(
+    n_shards: int, s: int, neighbors: Dict[int, NeighborLink]
+) -> Assignment:
+    """Vectorized Algorithm 2: identical output to the heap reference.
+
+    The heap greedy selects the K smallest priorities from the union of the
+    per-neighbor ladders {base_u + c·inc_u : c ≥ 1}, ties broken by (value,
+    u, c). Instead of popping one shard at a time, bisect a threshold window
+    (lo, hi] with batched exact rung counts until it holds only O(|U|)
+    candidate rungs, then pick the remaining winners with one lexsort in the
+    heap's exact (value, u, c) pop order. The per-shard Python loop is gone,
+    which is what keeps planning sub-millisecond at ≥256 neighbors.
+    """
+    if not neighbors:
+        raise ValueError("no neighbors to pull from")
+    us = sorted(neighbors)
+    nU = len(us)
+    base = np.array([neighbors[u].prop_s + neighbors[u].sync_s for u in us])
+    inc = np.array([s * neighbors[u].trans_s_per_byte for u in us])
+    if np.any(inc <= 0.0) or not np.all(np.isfinite(base + inc)):
+        return greedy_shard_assignment(n_shards, s, neighbors)  # degenerate
+
+    K = int(n_shards)
+
+    def counts_leq(theta: float) -> np.ndarray:
+        """Per-neighbor count of rungs with base + c·inc <= theta (exact in
+        the same float arithmetic as the heap's priorities)."""
+        est = np.floor((theta - base) / inc)
+        est = np.minimum(np.maximum(est, 0.0), K).astype(np.int64)
+        for _ in range(64):  # fp correction: settle on the true boundary
+            over = (est > 0) & (base + est * inc > theta)
+            under = (est < K) & (base + (est + 1) * inc <= theta)
+            if not (over.any() or under.any()):
+                break
+            est[over] -= 1
+            est[under & ~over] += 1
+        return est
+
+    counts = None
+    # Fast path: the real-valued water level θ with Σ_u max(0, (θ−b_u)/i_u)
+    # = K (active-set iteration). Its floored counts undershoot K by at most
+    # ~|U| rungs; merge the deficit rungs with a tiny frontier heap in the
+    # heap solver's exact (value, u, c) pop order.
+    w = 1.0 / inc
+    active = np.ones(nU, bool)
+    theta = 0.0
+    for _ in range(nU + 2):
+        denom = w[active].sum()
+        theta = (K + (base[active] * w[active]).sum()) / denom
+        nxt = base < theta
+        if not nxt.any():
+            break
+        if (nxt == active).all():
+            break
+        active = nxt
+    if np.isfinite(theta):
+        cl = counts_leq(theta)
+        d = K - int(cl.sum())
+        if 0 <= d <= max(64, 4 * nU):
+            frontier = [(base[j] + (cl[j] + 1) * inc[j], j, cl[j] + 1)
+                        for j in range(nU)]
+            heapq.heapify(frontier)
+            counts = cl.copy()
+            for _ in range(d):
+                _, j, c = heapq.heappop(frontier)
+                counts[j] += 1
+                heapq.heappush(frontier, (base[j] + (c + 1) * inc[j], j, c + 1))
+
+    if counts is None:
+        # Fallback: threshold bisection with exact counts. Invariant:
+        # total(lo) < K <= total(hi); shrink until the window holds a handful
+        # of candidate rungs (or the floats are adjacent), then enumerate.
+        lo = np.nextafter(float(np.min(base + inc)), -np.inf)
+        cl = counts_leq(lo)
+        if cl.sum() >= K:  # no rung below the min — safety only
+            return greedy_shard_assignment(n_shards, s, neighbors)
+        hi = float(np.max(base + K * inc))  # one neighbor takes everything
+        ch = counts_leq(hi)
+        cap = max(64, 4 * nU)
+        while int(ch.sum() - cl.sum()) > cap and hi > np.nextafter(lo, np.inf):
+            mid = 0.5 * (lo + hi)
+            if mid <= lo or mid >= hi:
+                break
+            cm = counts_leq(mid)
+            if cm.sum() >= K:
+                hi, ch = mid, cm
+            else:
+                lo, cl = mid, cm
+        # Take the window's remaining R winners in (value, u, c) pop order.
+        m = ch - cl
+        M = int(m.sum())
+        u_win = np.repeat(np.arange(nU), m)
+        c_win = (np.arange(M)
+                 - np.repeat(np.concatenate(([0], np.cumsum(m)[:-1])), m)
+                 + np.repeat(cl, m) + 1)
+        v_win = base[u_win] + c_win * inc[u_win]
+        # Pairs are laid out in (u, c) order, so a stable value sort breaks
+        # ties by position — exactly the heap's (value, u, c) pop order.
+        order = np.argsort(v_win, kind="stable")
+        chosen = order[:K - int(cl.sum())]
+        counts = cl + np.bincount(u_win[chosen], minlength=nU)
+
+    # Reconstruct the heap's shard indices: pop order == sort by (value, u, c).
+    # Pairs are laid out in (u, c) order, so a stable value sort breaks ties
+    # by position — the heap's exact pop order.
+    u_idx = np.repeat(np.arange(nU), counts)
+    offs = np.concatenate(([0], np.cumsum(counts)[:-1]))
+    c_arr = np.arange(K) - np.repeat(offs, counts) + 1
+    values = base[u_idx] + c_arr * inc[u_idx]
+    order = np.argsort(values, kind="stable")
+    ranks = np.empty(K, np.int64)
+    ranks[order] = np.arange(K)
+    # Within one neighbor values ascend with c, so its ranks are already
+    # ascending — matching the heap's append order without another sort.
+    shards: Dict[int, List[int]] = {u: [] for u in neighbors}
+    pos = 0
+    for j, u in enumerate(us):
+        n = int(counts[j])
+        shards[u] = ranks[pos:pos + n].tolist()
+        pos += n
+    cmap = {u: len(v) for u, v in shards.items()}
+    worst, per = completion_time(cmap, s, neighbors)
+    return Assignment(s, shards, worst, per)
+
+
+VEC_SOLVER_MIN_NEIGHBORS = 32  # below this the heap's constant factor wins
+
+
+def auto_greedy_solver(
+    n_shards: int, s: int, neighbors: Dict[int, NeighborLink]
+) -> Assignment:
+    """Dispatch Algorithm 2 to the vectorized solver on wide instances.
+
+    Both solvers produce the identical assignment, so the dispatch threshold
+    never changes results — only wall time.
+    """
+    if len(neighbors) >= VEC_SOLVER_MIN_NEIGHBORS and n_shards > len(neighbors):
+        return greedy_shard_assignment_vec(n_shards, s, neighbors)
+    return greedy_shard_assignment(n_shards, s, neighbors)
 
 
 # ---------------------------------------------------------------------------
@@ -185,102 +336,28 @@ def _compositions(total: int, parts: int):
 
 
 # ---------------------------------------------------------------------------
-# Whole-plan baselines (replication mechanisms, §VI-F ablation 1).
+# Back-compat: whole-plan construction moved to repro.core.plans (the shared
+# plans path). Lazy re-export avoids a circular import (plans imports the
+# solvers from this module).
 # ---------------------------------------------------------------------------
 
-
-@dataclass
-class ReplicationPlan:
-    """What each source sends to the new node, with predicted delay."""
-    strategy: str
-    sources: Dict[int, int]  # source node -> bytes to send
-    routes: Dict[int, List[int]]  # source node -> path to new node
-    predicted_delay_s: float
-
-
-def measured_neighbors(
-    topo: Topology, new_node: int, sync: Optional[Dict[int, float]] = None
-) -> Dict[int, NeighborLink]:
-    """Monitor measurement of direct neighbors (iperf stand-in, §IV-A)."""
-    out = {}
-    for u in topo.neighbors(new_node):
-        l = topo.link(u, new_node)
-        out[u] = NeighborLink(l.latency_s, l.trans_delay_per_byte,
-                              (sync or {}).get(u, 0.0))
-    return out
+_PLAN_EXPORTS = (
+    "ReplicationPlan",
+    "measured_neighbors",
+    "chaos_plan",
+    "chaos_even_plan",
+    "single_source_plan",
+    "multi_source_plan",
+    "build_plan",
+    "plan_assignment",
+)
 
 
-def chaos_plan(
-    topo: Topology, new_node: int, state_bytes: int,
-    tensor_sizes: Sequence[int], sync: Optional[Dict[int, float]] = None,
-    solver=binary_search_assignment,
-) -> ReplicationPlan:
-    """Multi-neighbor replication with Algorithm 1+2 shard scheduling."""
-    nb = measured_neighbors(topo, new_node, sync)
-    asg = solver(tensor_sizes, nb)
-    sources = {u: len(ks) * asg.shard_size for u, ks in
-               asg.shards_per_neighbor.items() if ks}
-    routes = {u: [u, new_node] for u in sources}
-    return ReplicationPlan("chaos", sources, routes, asg.completion_s)
-
-
-def chaos_even_plan(topo, new_node, state_bytes, tensor_sizes, sync=None):
-    """Multi-neighbor replication with *even* shards (ablation variant)."""
-    nb = measured_neighbors(topo, new_node, sync)
-    k = len(nb)
-    s = math.ceil(state_bytes / k)
-    asg = even_assignment(k, s, nb)
-    sources = {u: len(ks) * s for u, ks in asg.shards_per_neighbor.items() if ks}
-    return ReplicationPlan("multi-neighbor-even", sources,
-                           {u: [u, new_node] for u in sources}, asg.completion_s)
-
-
-def single_source_plan(
-    topo: Topology, new_node: int, state_bytes: int, sync=None
-) -> ReplicationPlan:
-    """EDL+ [13]/Elan [14]: pull everything from the fastest neighbor."""
-    nb = measured_neighbors(topo, new_node, sync)
-    if not nb:
-        raise ValueError("new node has no neighbors")
-    best_u, best_t = None, float("inf")
-    for u, l in nb.items():
-        t = l.prop_s + l.sync_s + state_bytes * l.trans_s_per_byte
-        if t < best_t:
-            best_u, best_t = u, t
-    return ReplicationPlan("single-source", {best_u: state_bytes},
-                           {best_u: [best_u, new_node]}, best_t)
-
-
-def multi_source_plan(
-    topo: Topology, new_node: int, state_bytes: int, sync=None
-) -> ReplicationPlan:
-    """Autoscaling [18]: even shards from ALL active nodes, routed along
-    shortest paths — multi-hop forwards included (Fig 1c pathology)."""
-    others = [n for n in topo.active_nodes() if n != new_node]
-    if not others:
-        raise ValueError("no sources")
-    share = math.ceil(state_bytes / len(others))
-    sources, routes = {}, {}
-    link_load: Dict[Tuple[int, int], float] = {}
-    worst_path = 0.0
-    for u in others:
-        path = topo.shortest_path(u, new_node, share)
-        prop, trans = topo.path_delay_per_byte(path)
-        sources[u] = share
-        routes[u] = path
-        worst_path = max(worst_path, prop + share * trans + (sync or {}).get(u, 0.0))
-        for a, b in zip(path, path[1:]):
-            key = (min(a, b), max(a, b))
-            link_load[key] = link_load.get(key, 0.0) + share
-    # Multi-hop routes serialize on shared links (Fig 1c): the completion time
-    # is bounded below by the most-loaded link's drain time.
-    bottleneck = max(
-        (load * topo.link(a, b).trans_delay_per_byte
-         for (a, b), load in link_load.items()),
-        default=0.0,
-    )
-    return ReplicationPlan("multi-source", sources, routes,
-                           max(worst_path, bottleneck))
+def __getattr__(name):  # PEP 562
+    if name in _PLAN_EXPORTS:
+        from repro.core import plans
+        return getattr(plans, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 # ---------------------------------------------------------------------------

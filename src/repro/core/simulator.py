@@ -49,6 +49,28 @@ class Sim:
             self.now = max(self.now, until)
 
 
+class TransferHandle:
+    """Cancellation token for an in-flight transfer.
+
+    Cancelling before the scheduled delivery suppresses the completion
+    callback; bandwidth already reserved on the links stays reserved (the
+    bytes were on the wire when the event interrupted them — matching what a
+    real socket teardown can and cannot reclaim)."""
+
+    __slots__ = ("cancelled", "done_t")
+
+    def __init__(self):
+        self.cancelled = False
+        self.done_t: Optional[float] = None
+
+    @property
+    def done(self) -> bool:
+        return self.done_t is not None
+
+    def cancel(self):
+        self.cancelled = True
+
+
 class Network:
     """Store-and-forward transfers with per-link FIFO occupancy."""
 
@@ -72,13 +94,27 @@ class Network:
         return done
 
     def transfer(self, route: List[int], nbytes: float,
-                 on_done: Callable[[float], None]):
-        """Send ``nbytes`` along ``route`` (store-and-forward per hop)."""
+                 on_done: Callable[[float], None],
+                 handle: Optional[TransferHandle] = None) -> TransferHandle:
+        """Send ``nbytes`` along ``route`` (store-and-forward per hop).
+
+        Returns a :class:`TransferHandle`; cancelling it before delivery
+        suppresses ``on_done`` (used by the churn engine to invalidate
+        replications overtaken by a later churn event)."""
+        handle = handle if handle is not None else TransferHandle()
         t = self.sim.now
         for a, b in zip(route, route[1:]):
             t = self._hop(a, b, nbytes, t)
             self.bytes_on_wire += nbytes
-        self.sim.at(t, lambda: on_done(t))
+
+        def deliver():
+            if handle.cancelled:
+                return
+            handle.done_t = t
+            on_done(t)
+
+        self.sim.at(t, deliver)
+        return handle
 
     def control(self, u: int, v: int, on_done: Callable[[], None],
                 payload_bytes: float = CONTROL_MSG_BYTES):

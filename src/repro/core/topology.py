@@ -102,6 +102,12 @@ class Topology:
 
         return nx.shortest_path(self.g, u, v, weight=w)
 
+    def has_path(self, u: int, v: int) -> bool:
+        """True when a control route exists (churn can fragment the overlay)."""
+        if u not in self.g or v not in self.g:
+            return False
+        return nx.has_path(self.g, u, v)
+
     def snapshot(self) -> dict:
         return {
             "nodes": {n: dataclasses.asdict(i) for n, i in self.nodes.items()},

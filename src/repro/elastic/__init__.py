@@ -1,3 +1,3 @@
-from repro.elastic.trainer import ElasticTrainer
+from repro.elastic.trainer import ElasticTrainer, TrainerBackend
 
-__all__ = ["ElasticTrainer"]
+__all__ = ["ElasticTrainer", "TrainerBackend"]

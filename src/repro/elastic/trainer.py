@@ -34,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.engine import ChurnEngine, ChurnEvent, EventLedger
 from repro.core.replication import plan_replication
 from repro.core.sharding_alg import NeighborLink
 
@@ -169,6 +170,19 @@ class ElasticTrainer:
         self.events.append(ev)
         return ev
 
+    # -- scenario replay (the unified churn pipeline) ---------------------------------
+
+    def replay_scenario(self, events, *, batch_fn=None, steps_between: int = 1,
+                        min_active: int = 2) -> EventLedger:
+        """Drive this trainer with a churn trace through the same
+        :class:`~repro.core.engine.ChurnEngine` pipeline the simulator uses.
+        Returns the event ledger; per-event wall times land in
+        ``self.events`` (ScaleEvent list) as before."""
+        engine = ChurnEngine(TrainerBackend(self, batch_fn=batch_fn,
+                                            steps_between=steps_between,
+                                            min_active=min_active))
+        return engine.run(events)
+
     # -- stragglers ------------------------------------------------------------------
 
     def straggler_report(self, threshold: float = 2.0) -> dict:
@@ -181,3 +195,98 @@ class ElasticTrainer:
             out[n] = {"mean_s": float(arr.mean()), "p95_s": float(np.percentile(arr, 95)),
                       "n_steps": len(arr)}
         return out
+
+
+# ---------------------------------------------------------------------------
+# Churn-engine backend: the same trace files the simulator replays drive a
+# live ElasticTrainer on real JAX devices.
+# ---------------------------------------------------------------------------
+
+
+class TrainerBackend:
+    """Executes churn events on an :class:`ElasticTrainer`.
+
+    Real hardware applies events sequentially (there is no virtual clock to
+    overlap on), but the pipeline, the trace format, and the ledger are
+    shared with :class:`~repro.core.engine.SimBackend` — one scenario file
+    exercises the protocol in simulation *and* on real arrays. Ledger
+    records carry only deterministic fields (device ids, step indices, plan
+    shapes); wall-clock timings stay in ``trainer.events``.
+    """
+
+    def __init__(self, trainer: ElasticTrainer, *, batch_fn=None,
+                 steps_between: int = 1, min_active: int = 2):
+        self.trainer = trainer
+        self.batch_fn = batch_fn
+        self.steps_between = steps_between
+        self.min_active = min_active
+        self.results: Dict[int, object] = {}
+        self._node_device: Dict[int, object] = {}  # trace node id -> device
+        self._departed: set = set()  # trace nodes that already left/failed
+
+    # -- engine protocol -----------------------------------------------------
+
+    def advance_to(self, t: float, ledger: EventLedger):
+        if self.batch_fn is None:
+            return
+        for _ in range(self.steps_between):
+            self.trainer.step(self.batch_fn())
+
+    def handle(self, seq: int, ev: ChurnEvent, ledger: EventLedger):
+        tr = self.trainer
+        if ev.kind == "join":
+            free = [d for d in tr.pool if d not in tr.active]
+            if not free:
+                ledger.append(seq, ev.t, ev.kind, ev.node, "skipped-pool-exhausted")
+                return
+            device = free[0]
+            sev = tr.scale_out(device)
+            # The device may be a reuse of one an earlier trace node shed;
+            # purge stale mappings so later events can't mis-target it.
+            self._node_device = {n: d for n, d in self._node_device.items()
+                                 if d is not device}
+            self._node_device[ev.node] = device
+            self._departed.discard(ev.node)
+            self.results[seq] = sev
+            ledger.append(seq, ev.t, ev.kind, ev.node, "scale-out", {
+                "device": device.id, "step": sev.step,
+                "n_active": len(tr.active),
+                "n_shards": sev.plan_summary["n_shards"],
+                "shard_size": sev.plan_summary["shard_size"],
+            })
+            return
+        if ev.kind in ("leave", "node-failure"):
+            failure = ev.kind == "node-failure"
+            if ev.node in self._departed:  # duplicate departure in the trace
+                ledger.append(seq, ev.t, ev.kind, ev.node, "skipped-not-active")
+                return
+            if len(tr.active) <= self.min_active:
+                ledger.append(seq, ev.t, ev.kind, ev.node, "skipped-min-cluster")
+                return
+            device = self._node_device.get(ev.node)
+            if device is not None and device not in tr.active:
+                ledger.append(seq, ev.t, ev.kind, ev.node, "skipped-not-active")
+                return
+            if device is None:
+                # Unmapped trace node: deterministically shed the newest
+                # device that isn't standing in for a mapped trace node
+                # (pool order is stable).
+                mapped_live = {d for d in self._node_device.values()
+                               if d in tr.active}
+                cands = [d for d in tr.active if d not in mapped_live]
+                device = (cands or tr.active)[-1]
+            sev = tr.scale_in(device, failure=failure)
+            self._node_device[ev.node] = device
+            self._departed.add(ev.node)
+            self.results[seq] = sev
+            ledger.append(seq, ev.t, ev.kind, ev.node,
+                          "node-failed" if failure else "scaled-in",
+                          {"device": device.id, "step": sev.step,
+                           "n_active": len(tr.active)})
+            return
+        # Host-simulated devices share one interconnect; link events are
+        # acknowledged for trace parity but have no physical effect here.
+        ledger.append(seq, ev.t, ev.kind, (ev.u, ev.v), "noop-link")
+
+    def drain(self, ledger: EventLedger):
+        pass

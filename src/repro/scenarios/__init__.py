@@ -1,0 +1,20 @@
+"""Trace-driven churn scenarios for the ChurnEngine (see README.md here)."""
+from repro.scenarios.trace import ScenarioTrace
+from repro.scenarios.generators import (
+    GENERATORS,
+    diurnal_waves,
+    flash_crowd,
+    link_flaps,
+    poisson_churn,
+    regional_partition,
+)
+
+__all__ = [
+    "ScenarioTrace",
+    "GENERATORS",
+    "poisson_churn",
+    "diurnal_waves",
+    "regional_partition",
+    "flash_crowd",
+    "link_flaps",
+]

@@ -1,0 +1,247 @@
+"""Seeded churn-scenario generators (paper §VI-A's "continuous chaos", made
+reproducible).
+
+Every generator is a pure function of its arguments + seed and returns a
+:class:`ScenarioTrace`; the same call produces the same trace forever, which
+is what the engine's byte-identical-ledger guarantee builds on.
+
+Catalog:
+* ``poisson_churn``      — memoryless independent joins/leaves (the classic
+  P2P churn model; rates in events/second).
+* ``diurnal_waves``      — joins peak in the "day", leaves in the "night"
+  (sinusoidal intensity, thinning sampler) — volunteer-compute behavior.
+* ``regional_partition`` — every link crossing a region boundary fails at
+  once (backbone cut), optionally healing later.
+* ``flash_crowd``        — a burst of joins within a short window (a newly
+  announced training run attracting participants).
+* ``link_flaps``         — correlated link-failure/link-join pairs clustered
+  on one focal node's links (a flaky NIC/ToR switch).
+"""
+from __future__ import annotations
+
+import math
+import random
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.core.engine import ChurnEvent
+from repro.core.topology import Topology
+from repro.scenarios.trace import ScenarioTrace
+
+DEFAULT_BW_RANGE = (100.0, 1000.0)  # Mbit/s, the paper's tc range
+DEFAULT_LAT_RANGE = (0.001, 0.02)
+DEFAULT_COMPUTE_RANGE = (0.5, 2.0)
+
+
+class _Membership:
+    """Tracks who a generator believes is in the cluster while it emits
+    events, so leaves target plausible members and joins pick live peers.
+    The engine re-validates everything at replay time anyway."""
+
+    def __init__(self, base_nodes: Sequence[int], rng: random.Random,
+                 next_id: int = 1000):
+        self.alive: List[int] = sorted(base_nodes)
+        self.protected = min(self.alive) if self.alive else None  # scheduler
+        self.rng = rng
+        self.next_id = next_id
+
+    def new_node(self) -> int:
+        n = self.next_id
+        self.next_id += 1
+        return n
+
+    def pick_peers(self, k: int) -> List[int]:
+        k = min(k, len(self.alive))
+        return sorted(self.rng.sample(self.alive, k))
+
+    def pick_victim(self) -> Optional[int]:
+        victims = [n for n in self.alive if n != self.protected]
+        if len(victims) <= 1:  # keep a cluster worth scaling
+            return None
+        return self.rng.choice(victims)
+
+    def join(self, node: int):
+        self.alive.append(node)
+        self.alive.sort()
+
+    def leave(self, node: int):
+        if node in self.alive:
+            self.alive.remove(node)
+
+
+def _join_event(t: float, m: _Membership, rng: random.Random, *,
+                max_links: int, bw_range, lat_range, compute_range) -> ChurnEvent:
+    node = m.new_node()
+    peers = m.pick_peers(rng.randint(1, max_links))
+    links = {p: (rng.uniform(*bw_range), rng.uniform(*lat_range))
+             for p in peers}
+    ev = ChurnEvent(t=t, kind="join", node=node, links=links,
+                    compute_s=rng.uniform(*compute_range))
+    m.join(node)
+    return ev
+
+
+def poisson_churn(
+    base_nodes: Sequence[int], *, seed: int, horizon_s: float,
+    rate_join: float = 0.05, rate_leave: float = 0.04,
+    failure_fraction: float = 0.25, max_links: int = 3,
+    bw_range=DEFAULT_BW_RANGE, lat_range=DEFAULT_LAT_RANGE,
+    compute_range=DEFAULT_COMPUTE_RANGE, t_start: float = 0.0,
+) -> ScenarioTrace:
+    """Seeded Poisson joins/leaves; ``failure_fraction`` of departures are
+    crashes (node-failure) rather than graceful leaves."""
+    rng = random.Random(seed)
+    m = _Membership(base_nodes, rng)
+    events: List[ChurnEvent] = []
+    total = rate_join + rate_leave
+    t = t_start
+    while True:
+        t += rng.expovariate(total)
+        if t >= t_start + horizon_s:
+            break
+        if rng.random() < rate_join / total:
+            events.append(_join_event(t, m, rng, max_links=max_links,
+                                      bw_range=bw_range, lat_range=lat_range,
+                                      compute_range=compute_range))
+        else:
+            victim = m.pick_victim()
+            if victim is None:
+                continue
+            kind = ("node-failure" if rng.random() < failure_fraction
+                    else "leave")
+            events.append(ChurnEvent(t=t, kind=kind, node=victim))
+            m.leave(victim)
+    return ScenarioTrace("poisson-churn", seed, events, {
+        "rate_join": rate_join, "rate_leave": rate_leave,
+        "horizon_s": horizon_s, "base_nodes": len(base_nodes),
+    })
+
+
+def diurnal_waves(
+    base_nodes: Sequence[int], *, seed: int, horizon_s: float,
+    period_s: float, peak_rate: float = 0.1, amplitude: float = 0.9,
+    max_links: int = 3, bw_range=DEFAULT_BW_RANGE,
+    lat_range=DEFAULT_LAT_RANGE, compute_range=DEFAULT_COMPUTE_RANGE,
+) -> ScenarioTrace:
+    """Volunteer-compute pattern: join intensity peaks at phase 0 ("day"),
+    leave intensity half a period later ("night"). Sampled by thinning a
+    ``peak_rate`` Poisson process with sinusoidal acceptance."""
+    rng = random.Random(seed)
+    m = _Membership(base_nodes, rng)
+    events: List[ChurnEvent] = []
+
+    def intensity(t: float, phase: float) -> float:
+        return 0.5 * peak_rate * (1.0 + amplitude
+                                  * math.sin(2 * math.pi * t / period_s + phase))
+
+    t = 0.0
+    while True:
+        t += rng.expovariate(2 * peak_rate)  # envelope for join + leave
+        if t >= horizon_s:
+            break
+        lam_join = intensity(t, 0.0)
+        lam_leave = intensity(t, math.pi)
+        accept = rng.random() * 2 * peak_rate
+        if accept < lam_join:
+            events.append(_join_event(t, m, rng, max_links=max_links,
+                                      bw_range=bw_range, lat_range=lat_range,
+                                      compute_range=compute_range))
+        elif accept < lam_join + lam_leave:
+            victim = m.pick_victim()
+            if victim is not None:
+                events.append(ChurnEvent(t=t, kind="leave", node=victim))
+                m.leave(victim)
+    return ScenarioTrace("diurnal-waves", seed, events, {
+        "period_s": period_s, "peak_rate": peak_rate,
+        "amplitude": amplitude, "horizon_s": horizon_s,
+    })
+
+
+def regional_partition(
+    topo: Topology, *, seed: int, t_cut: float,
+    region_fraction: float = 0.4, heal_after_s: Optional[float] = None,
+    stagger_s: float = 0.05,
+) -> ScenarioTrace:
+    """Cut every link crossing a random region boundary (a WAN backbone
+    failure isolating ``region_fraction`` of the cluster); if
+    ``heal_after_s`` is set the same links come back with their original
+    bandwidth/latency."""
+    rng = random.Random(seed)
+    nodes = sorted(topo.active_nodes())
+    k = max(1, int(len(nodes) * region_fraction))
+    region: Set[int] = set(rng.sample(nodes, k))
+    events: List[ChurnEvent] = []
+    cut = []
+    for u, v in sorted(topo.g.edges):
+        if (u in region) != (v in region):
+            cut.append((u, v, topo.link(u, v)))
+    for i, (u, v, link) in enumerate(cut):
+        jitter = rng.uniform(0, stagger_s)
+        events.append(ChurnEvent(t=t_cut + jitter, kind="link-failure",
+                                 u=u, v=v))
+        if heal_after_s is not None:
+            events.append(ChurnEvent(t=t_cut + heal_after_s + jitter,
+                                     kind="link-join", u=u, v=v,
+                                     bandwidth_mbps=link.bandwidth_mbps,
+                                     latency_s=link.latency_s))
+    return ScenarioTrace("regional-partition", seed, sorted(events, key=lambda e: e.t), {
+        "region": sorted(region), "links_cut": len(cut),
+        "healed": heal_after_s is not None,
+    })
+
+
+def flash_crowd(
+    base_nodes: Sequence[int], *, seed: int, t_start: float,
+    n_joins: int, window_s: float = 5.0, max_links: int = 3,
+    bw_range=DEFAULT_BW_RANGE, lat_range=DEFAULT_LAT_RANGE,
+    compute_range=DEFAULT_COMPUTE_RANGE,
+) -> ScenarioTrace:
+    """A burst of ``n_joins`` join requests within ``window_s`` — the
+    stress case for overlapping replications sharing source links."""
+    rng = random.Random(seed)
+    m = _Membership(base_nodes, rng)
+    offsets = sorted(rng.uniform(0, window_s) for _ in range(n_joins))
+    events = [_join_event(t_start + off, m, rng, max_links=max_links,
+                          bw_range=bw_range, lat_range=lat_range,
+                          compute_range=compute_range)
+              for off in offsets]
+    return ScenarioTrace("flash-crowd", seed, events, {
+        "n_joins": n_joins, "window_s": window_s,
+    })
+
+
+def link_flaps(
+    topo: Topology, *, seed: int, horizon_s: float, n_flaps: int,
+    flap_len_s: float = 2.0, correlation: float = 0.7,
+) -> ScenarioTrace:
+    """Correlated link flapping: with probability ``correlation`` each flap
+    hits a link incident to one focal node (a flaky NIC / ToR switch);
+    otherwise a uniformly random link. Each flap is a link-failure followed
+    by a link-join restoring the original link parameters."""
+    rng = random.Random(seed)
+    edges = sorted(topo.g.edges)
+    if not edges:
+        return ScenarioTrace("link-flaps", seed, [], {"n_flaps": 0})
+    focal = rng.choice(sorted(topo.active_nodes()))
+    focal_edges = [e for e in edges if focal in e]
+    events: List[ChurnEvent] = []
+    for _ in range(n_flaps):
+        t = rng.uniform(0, max(horizon_s - flap_len_s, 0.0))
+        pool = focal_edges if (focal_edges and rng.random() < correlation) else edges
+        u, v = pool[rng.randrange(len(pool))]
+        link = topo.link(u, v)
+        events.append(ChurnEvent(t=t, kind="link-failure", u=u, v=v))
+        events.append(ChurnEvent(t=t + flap_len_s, kind="link-join", u=u, v=v,
+                                 bandwidth_mbps=link.bandwidth_mbps,
+                                 latency_s=link.latency_s))
+    return ScenarioTrace("link-flaps", seed, sorted(events, key=lambda e: e.t), {
+        "focal": focal, "n_flaps": n_flaps, "correlation": correlation,
+    })
+
+
+GENERATORS = {
+    "poisson-churn": poisson_churn,
+    "diurnal-waves": diurnal_waves,
+    "regional-partition": regional_partition,
+    "flash-crowd": flash_crowd,
+    "link-flaps": link_flaps,
+}

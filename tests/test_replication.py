@@ -3,7 +3,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hypothesis optional: property tests skip, rest run
+    def given(*a, **k):
+        return lambda fn: pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+    def settings(*a, **k):
+        return lambda fn: fn
+
+    class _NoStrategies:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _NoStrategies()
 
 from repro.core.replication import (
     assemble_shards,

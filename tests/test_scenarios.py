@@ -1,0 +1,114 @@
+"""Scenario generators + trace format tests."""
+import json
+
+from repro.core import random_edge_topology
+from repro.core.engine import ChurnEvent
+from repro.scenarios import (
+    ScenarioTrace,
+    diurnal_waves,
+    flash_crowd,
+    link_flaps,
+    poisson_churn,
+    regional_partition,
+)
+
+
+def _jsons(trace):
+    return [e.to_json() for e in trace]
+
+
+def test_generators_are_seed_deterministic():
+    topo = random_edge_topology(16, seed=3)
+    nodes = topo.active_nodes()
+    for mk in (
+        lambda: poisson_churn(nodes, seed=5, horizon_s=600.0),
+        lambda: diurnal_waves(nodes, seed=5, horizon_s=600.0, period_s=120.0),
+        lambda: regional_partition(topo, seed=5, t_cut=10.0, heal_after_s=30.0),
+        lambda: flash_crowd(nodes, seed=5, t_start=3.0, n_joins=12),
+        lambda: link_flaps(topo, seed=5, horizon_s=600.0, n_flaps=9),
+    ):
+        assert _jsons(mk()) == _jsons(mk())
+
+
+def test_trace_save_load_roundtrip(tmp_path):
+    topo = random_edge_topology(12, seed=1)
+    trace = poisson_churn(topo.active_nodes(), seed=9, horizon_s=900.0)
+    p = tmp_path / "t.jsonl"
+    trace.save(p)
+    loaded = ScenarioTrace.load(p)
+    assert loaded.name == trace.name and loaded.seed == trace.seed
+    assert _jsons(loaded) == _jsons(trace)
+    # JSONL: one valid JSON object per line.
+    for line in p.read_text().splitlines():
+        json.loads(line)
+
+
+def test_poisson_churn_event_mix_and_horizon():
+    topo = random_edge_topology(24, seed=2)
+    trace = poisson_churn(topo.active_nodes(), seed=11, horizon_s=3000.0,
+                          rate_join=0.05, rate_leave=0.04)
+    kinds = trace.kinds()
+    assert kinds.get("join", 0) > 0
+    assert kinds.get("leave", 0) + kinds.get("node-failure", 0) > 0
+    assert all(0 <= e.t < 3000.0 for e in trace)
+    # Leaves never target the protected (scheduler) node.
+    sched = min(topo.active_nodes())
+    assert all(e.node != sched for e in trace
+               if e.kind in ("leave", "node-failure"))
+
+
+def test_regional_partition_cuts_only_cross_region_links():
+    topo = random_edge_topology(20, seed=4, degree=4)
+    trace = regional_partition(topo, seed=6, t_cut=5.0, heal_after_s=20.0)
+    region = set(trace.meta["region"])
+    fails = [e for e in trace if e.kind == "link-failure"]
+    heals = [e for e in trace if e.kind == "link-join"]
+    assert len(fails) == trace.meta["links_cut"] > 0
+    assert len(heals) == len(fails)  # healed partition restores every link
+    for e in fails:
+        assert (e.u in region) != (e.v in region)
+    # Heals restore the original link parameters.
+    for e in heals:
+        link = topo.link(e.u, e.v)
+        assert e.bandwidth_mbps == link.bandwidth_mbps
+        assert e.latency_s == link.latency_s
+
+
+def test_flash_crowd_is_a_join_burst_in_window():
+    trace = flash_crowd(range(8), seed=1, t_start=100.0, n_joins=15,
+                        window_s=4.0)
+    assert len(trace) == 15
+    assert all(e.kind == "join" for e in trace)
+    assert all(100.0 <= e.t <= 104.0 for e in trace)
+    assert len({e.node for e in trace}) == 15  # unique ids
+    assert all(e.links for e in trace)
+
+
+def test_link_flaps_pair_failure_with_restore():
+    topo = random_edge_topology(10, seed=8)
+    trace = link_flaps(topo, seed=8, horizon_s=300.0, n_flaps=7,
+                       flap_len_s=1.5)
+    fails = [e for e in trace if e.kind == "link-failure"]
+    joins = [e for e in trace if e.kind == "link-join"]
+    assert len(fails) == len(joins) == 7
+    by_link = {}
+    for e in fails:
+        by_link.setdefault((min(e.u, e.v), max(e.u, e.v)), []).append(e.t)
+    for e in joins:
+        key = (min(e.u, e.v), max(e.u, e.v))
+        assert key in by_link
+        assert topo.has_link(e.u, e.v)
+
+
+def test_churn_event_json_roundtrip():
+    evs = [
+        ChurnEvent(t=1.5, kind="join", node=7,
+                   links={2: (512.0, 0.01)}, compute_s=1.25),
+        ChurnEvent(t=2.0, kind="leave", node=3),
+        ChurnEvent(t=2.5, kind="link-join", u=1, v=4,
+                   bandwidth_mbps=200.0, latency_s=0.004),
+        ChurnEvent(t=3.0, kind="link-failure", u=1, v=4),
+    ]
+    for e in evs:
+        back = ChurnEvent.from_json(json.loads(json.dumps(e.to_json())))
+        assert back.to_json() == e.to_json()
