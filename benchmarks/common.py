@@ -78,6 +78,48 @@ def measure_scale_out(strategy: str, n_nodes: int, state_bytes: int,
             "ledger": ledger}
 
 
+def measure_midstream_link_failure(n_nodes: int, state_bytes: int,
+                                   tensor_sizes, *, seed: int = 0,
+                                   fail_after_s: float = 1.0,
+                                   partial_credit: bool = True,
+                                   train_iters: int = 1):
+    """Scale-out whose fastest shard stream is severed mid-replication.
+
+    The joining node's best-bandwidth link fails ``fail_after_s`` after the
+    join request — while its shard stream is on the wire — and the engine
+    re-plans. Returns the credit accounting off the ledger: with
+    ``partial_credit`` the delivered shard prefixes stay on the joining node
+    and only the missing bytes are re-planned; without it (the pre-credit
+    baseline) every in-flight byte is forfeited and re-sent.
+    """
+    topo = random_edge_topology(n_nodes, seed=seed)
+    cl = make_cluster(topo, state_bytes=state_bytes,
+                      tensor_sizes=tensor_sizes, strategy="chaos")
+    cl.train(train_iters)
+    new = 1000 + seed
+    links = join_links(topo, new, 3, seed + 7)
+    victim = max(links, key=lambda p: links[p].bandwidth_mbps)
+    t0 = cl.sim.now
+    events = [
+        ChurnEvent(t=t0, kind="join", node=new,
+                   links={p: (l.bandwidth_mbps, l.latency_s)
+                          for p, l in links.items()}),
+        ChurnEvent(t=t0 + fail_after_s, kind="link-failure", u=victim, v=new),
+    ]
+    ledger, results = run_trace_sim(cl, events, partial_credit=partial_credit)
+    replanned = [r for r in ledger if r.action == "replanned"]
+    res = results.get(0)
+    return {
+        "delay_s": res.delay_s if res is not None else float("nan"),
+        "replans": len(replanned),
+        "credited_bytes": sum(r.detail.get("credited_bytes", 0)
+                              for r in replanned),
+        "replanned_bytes": sum(r.detail.get("replanned_bytes", 0)
+                               for r in replanned),
+        "ledger": ledger,
+    }
+
+
 def measure_primitives(n_nodes: int, state_bytes: int, tensor_sizes,
                        seed: int = 0, train_iters: int = 1):
     """Blocking delays of the light primitives (connect-link /

@@ -6,6 +6,10 @@ Stop-free systems run as join events through the unified ChurnEngine
 stop-resume closed-form model.
 
 ``--smoke`` runs a single small configuration (CI wiring check, <10 s).
+``--churn`` additionally measures scale-out delay *under churn*: the join's
+fastest shard stream is severed mid-replication and the delay is compared
+with partial-transfer credit (delivered shards kept) vs the pre-credit
+forfeit-everything replan — the engine lever that shrinks recovery time.
 """
 from __future__ import annotations
 
@@ -13,7 +17,15 @@ import sys
 
 import numpy as np
 
-from benchmarks.common import CV_MODELS, MiB, measure_scale_out, print_csv, save, tensor_sizes_for
+from benchmarks.common import (
+    CV_MODELS,
+    MiB,
+    measure_midstream_link_failure,
+    measure_scale_out,
+    print_csv,
+    save,
+    tensor_sizes_for,
+)
 
 STRATEGIES = [("pollux", "Pollux"), ("single-source", "EDL+"),
               ("multi-source", "Autoscaling"), ("chaos", "Chaos")]
@@ -42,8 +54,36 @@ def run(smoke: bool = False):
     return rows
 
 
+def run_churn(repeats: int = 3):
+    """Scale-out delay when the largest shard stream dies mid-replication:
+    credit-aware replan vs pre-credit forfeit, per CV model."""
+    rows = []
+    for model, state, typ in CV_MODELS:
+        sizes = tensor_sizes_for(state, typ)
+        for mode, credit in (("credit", True), ("pre-credit", False)):
+            ds = [measure_midstream_link_failure(
+                      8, state, sizes, seed=r, partial_credit=credit)
+                  for r in range(repeats)]
+            rows.append({
+                "model": model, "mode": mode,
+                "delay_s": round(float(np.mean([d["delay_s"] for d in ds])), 3),
+                "credited_MiB": round(float(np.mean(
+                    [d["credited_bytes"] for d in ds])) / MiB, 1),
+                "replanned_MiB": round(float(np.mean(
+                    [d["replanned_bytes"] for d in ds])) / MiB, 1),
+            })
+    save("fig7_scaleout_delay_churn", rows)
+    return rows
+
+
 def main():
     smoke = "--smoke" in sys.argv[1:]
+    if "--churn" in sys.argv[1:]:
+        rows = run_churn()
+        print_csv("Scale-out delay under mid-replication churn (s)", rows,
+                  ["model", "mode", "delay_s", "credited_MiB",
+                   "replanned_MiB"])
+        return 0
     rows = run(smoke=smoke)
     print_csv("Fig 7: scale-out delay (s)", rows,
               ["model", "cluster", "system", "delay_s", "delay_std"])

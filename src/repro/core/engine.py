@@ -9,18 +9,26 @@ real-array ``ElasticTrainer`` with its own ad-hoc handling). The engine
 unifies them:
 
 * ``ChurnEvent``      — one churn occurrence (join / leave / node-failure /
-  link-join / link-leave / link-failure), JSON-serializable; scenario traces
-  (``repro.scenarios``) are just ordered lists of these.
+  link-join / link-leave / link-failure / link-degrade), JSON-serializable;
+  scenario traces (``repro.scenarios``) are just ordered lists of these.
 * ``EventLedger``     — the deterministic record of what the pipeline did
   with each event. Same seed ⇒ byte-identical ledger (``canonical_bytes``),
   which is what makes chaotic runs reproducible and diffable.
 * ``ChurnEngine``     — pulls events from any iterable source and drives a
   pluggable backend. ``SimBackend`` (here) executes them against the
-  discrete-event cluster with **overlapping-event semantics**: a leave or
-  link failure arriving mid-replication cancels the doomed shard streams and
-  re-plans the undelivered bytes instead of crashing or serializing.
+  discrete-event cluster with **overlapping-event semantics**: a leave,
+  link failure, or link-rate drop arriving mid-replication cancels the
+  doomed shard streams, *credits* the shard-aligned byte prefix each stream
+  already delivered (paper §IV-C overlap + delta recovery), and re-plans
+  only the genuinely missing bytes instead of crashing or serializing.
   ``TrainerBackend`` (``repro.elastic.trainer``) replays the *same* trace on
-  real JAX arrays.
+  real JAX arrays, mapping link events onto the per-device link model.
+
+Ledger credit fields (see docs/architecture.md for the full reference):
+``replanned`` records carry ``delivered_bytes`` (total on the new node,
+completed streams + credited prefixes), ``credited_bytes`` (the salvaged
+partial-stream portion alone), and ``replanned_bytes`` (what the new plan
+must still move); ``ready`` records carry the final ``credited_bytes``.
 """
 from __future__ import annotations
 
@@ -33,7 +41,11 @@ from repro.core.negotiation import InflightScaleOut, SimCluster
 from repro.core.topology import Link
 
 EVENT_KINDS = ("join", "leave", "node-failure",
-               "link-join", "link-leave", "link-failure")
+               "link-join", "link-leave", "link-failure", "link-degrade")
+
+#: floor for link-degrade rates: degrading to ≤ 0 Mbit/s would break the
+#: transfer-time model (divide by zero); severing is link-failure's job.
+MIN_LINK_MBPS = 1e-6
 
 
 @dataclass
@@ -47,8 +59,8 @@ class ChurnEvent:
     v: Optional[int] = None
     links: Optional[Dict[int, Tuple[float, float]]] = None  # peer -> (mbps, lat_s)
     compute_s: float = 1.0
-    bandwidth_mbps: Optional[float] = None  # link-join
-    latency_s: Optional[float] = None
+    bandwidth_mbps: Optional[float] = None  # link-join / link-degrade: new rate
+    latency_s: Optional[float] = None  # link-join / link-degrade: new latency
 
     def __post_init__(self):
         if self.kind not in EVENT_KINDS:
@@ -186,7 +198,8 @@ class SimBackend:
     DEFAULT_SOLVER_CHARGE_S = 1e-3
 
     def __init__(self, cluster: SimCluster, *, min_active: int = 2,
-                 solver_charge_s=DEFAULT_SOLVER_CHARGE_S):
+                 solver_charge_s=DEFAULT_SOLVER_CHARGE_S,
+                 partial_credit: bool = True):
         self.cluster = cluster
         self.min_active = min_active
         self.inflight: List[InflightScaleOut] = []
@@ -194,6 +207,7 @@ class SimBackend:
         self.results: Dict[int, object] = {}
         cluster.scheduler.solver_time_model = (
             None if solver_charge_s == "measured" else float(solver_charge_s))
+        cluster.scheduler.partial_credit = bool(partial_credit)
 
     # -- engine protocol -----------------------------------------------------
 
@@ -211,6 +225,7 @@ class SimBackend:
             "link-join": self._on_link_join,
             "link-leave": self._on_link_down,
             "link-failure": self._on_link_down,
+            "link-degrade": self._on_link_degrade,
         }
         dispatch[ev.kind](seq, ev, ledger)
 
@@ -243,12 +258,17 @@ class SimBackend:
                                   "delay_s": res.delay_s,
                                   "replication_s": res.replication_s,
                                   "replans": res.replans,
+                                  "credited_bytes": fl.credited_bytes(),
                                   "plan": fl.plan.summary(),
                               })
                 self.inflight.remove(fl)
 
     def _replan_touched(self, ledger: EventLedger, *, node=None, link=None):
-        """Re-plan (or abort) in-flight replications invalidated by churn."""
+        """Re-plan (or abort) in-flight replications invalidated by churn.
+
+        Each re-plan credits the shard-aligned prefix every cancelled stream
+        had delivered (``credited_bytes``); the new plan covers only the
+        ``replanned_bytes`` still missing from the joining node."""
         for fl in list(self.inflight):
             touched = ((node is not None and fl.uses_node(node))
                        or (link is not None and fl.uses_link(*link)))
@@ -256,10 +276,14 @@ class SimBackend:
                 continue
             seq = self._inflight_seq.get(fl.new_node, -1)
             if self.sched.replan_scale_out(fl):
+                delivered = fl.delivered_bytes()
                 ledger.append(seq, self.cluster.sim.now, "join", fl.new_node,
                               "replanned", {
                                   "replans": fl.replans,
-                                  "delivered_bytes": fl.delivered_bytes(),
+                                  "delivered_bytes": delivered,
+                                  "credited_bytes": fl.credited_bytes(),
+                                  "replanned_bytes": max(
+                                      0, fl.state_bytes - delivered),
                                   "plan": fl.plan.summary(),
                               })
             else:
@@ -351,13 +375,39 @@ class SimBackend:
                       {"blocking_s": res.delay_s})
         self._replan_touched(ledger, link=(u, v))
 
+    def _on_link_degrade(self, seq: int, ev: ChurnEvent, ledger: EventLedger):
+        """A link survives but its rate/latency changed (congestion, tc
+        reshaping, a failing NIC). The monitor re-measures, and any in-flight
+        replication riding the link gets a credit-aware reshuffle: delivered
+        shards stay put, the missing bytes are re-planned at the new rates."""
+        u, v = ev.u, ev.v
+        if not self.topo.has_link(u, v):
+            ledger.append(seq, ev.t, ev.kind, (u, v), "skipped-no-link")
+            return
+        link = self.topo.link(u, v)
+        if ev.bandwidth_mbps is not None:
+            # A zero/negative rate would divide-by-zero the transfer model;
+            # a link that slow is indistinguishable from one crawling at the
+            # floor (use link-failure to actually sever it).
+            link.bandwidth_mbps = max(float(ev.bandwidth_mbps), MIN_LINK_MBPS)
+        if ev.latency_s is not None:
+            link.latency_s = float(ev.latency_s)
+        self.sched.monitor.record("link-degrade", (u, v))
+        ledger.append(seq, ev.t, ev.kind, (u, v), "link-degraded", {
+            "bandwidth_mbps": link.bandwidth_mbps,
+            "latency_s": link.latency_s,
+        })
+        self._replan_touched(ledger, link=(u, v))
+
 
 def run_trace_sim(cluster: SimCluster, events: Iterable[ChurnEvent],
                   *, min_active: int = 2,
                   solver_charge_s=SimBackend.DEFAULT_SOLVER_CHARGE_S,
+                  partial_credit: bool = True,
                   ) -> Tuple[EventLedger, Dict[int, object]]:
     """Replay a churn trace through the engine on a simulated cluster."""
     engine = ChurnEngine(SimBackend(cluster, min_active=min_active,
-                                    solver_charge_s=solver_charge_s))
+                                    solver_charge_s=solver_charge_s,
+                                    partial_credit=partial_credit))
     ledger = engine.run(events)
     return ledger, engine.results

@@ -7,6 +7,17 @@ Following §IV-C, negotiation/measurement overlap with all-reduce and state
 replication overlaps with gradient computation — the *reported* delay of each
 primitive is its non-hidden (blocking) portion, which is what the paper's
 Table I / Fig 9 measure.
+
+Scale-out is split into begin / replan / finish phases so the churn engine
+(``engine.py``) can overlap events: ``begin_scale_out`` runs the §IV-B
+negotiation + measurement + Algorithm 1–2 planning and schedules the shard
+streams; ``replan_scale_out`` handles churn that lands mid-replication with
+**partial-transfer credit** — every cancelled stream keeps the shard-aligned
+byte prefix it already delivered (``TransferHandle.progress``), and only the
+missing suffix is re-planned over the surviving topology; ``finish_scale_out``
+installs state + sync policy once the streams drain. ``scheduler.partial_credit
+= False`` restores the forfeit-everything pre-credit behavior for A/B
+benchmarks.
 """
 from __future__ import annotations
 
@@ -49,12 +60,17 @@ class PrimitiveResult:
 
 @dataclass
 class TransferRecord:
-    """One source→new-node shard stream of an in-flight replication."""
+    """One source→new-node shard stream of an in-flight replication.
+
+    ``credited`` is set when churn cancels the stream mid-flight: the bytes
+    that had already landed on the new node, floored to the plan's shard
+    boundary (a resumable prefix — partial shards are re-sent)."""
     source: int
     nbytes: int
     route: List[int]
     handle: TransferHandle
     gen: int  # 0 for the original plan, 1+ per re-plan
+    credited: int = 0  # shard-floored bytes retained after cancellation
 
 
 @dataclass
@@ -64,7 +80,9 @@ class InflightScaleOut:
     The churn engine holds these between events: a leave / link-failure
     arriving mid-replication cancels the affected streams and re-plans the
     undelivered bytes from the surviving neighbors instead of crashing or
-    serializing the events (§IV-C overlap, taken to its conclusion)."""
+    serializing the events (§IV-C overlap, taken to its conclusion).
+    Delivered-byte accounting is byte-granular: completed streams count in
+    full, cancelled streams count their credited shard-aligned prefix."""
     new_node: int
     t0: float
     state_bytes: int
@@ -78,9 +96,18 @@ class InflightScaleOut:
     transfers: List[TransferRecord] = field(default_factory=list)
     replans: int = 0
     aborted: bool = False
+    t_last_credit: float = 0.0  # virtual time of the latest credited prefix
 
     def delivered_bytes(self) -> int:
-        return sum(r.nbytes for r in self.transfers if r.handle.done)
+        """Bytes already on the new node: completed streams + the credited
+        prefixes of cancelled ones."""
+        return (sum(r.nbytes for r in self.transfers if r.handle.done)
+                + self.credited_bytes())
+
+    def credited_bytes(self) -> int:
+        """Bytes salvaged from cancelled partial streams (never forfeited
+        back; monotone across re-plans)."""
+        return sum(r.credited for r in self.transfers)
 
     def pending(self) -> List[TransferRecord]:
         return [r for r in self.transfers
@@ -122,6 +149,10 @@ class ChaosScheduler:
         # (paper Table I semantics). The churn engine sets a fixed charge so
         # same-seed replays produce byte-identical ledgers.
         self.solver_time_model: Optional[float] = None
+        # Credit shard-aligned prefixes of cancelled streams instead of
+        # forfeiting all in-flight bytes. False restores the pre-credit
+        # replan-everything-undelivered behavior (benchmark baseline).
+        self.partial_credit = True
 
     # -- helpers ---------------------------------------------------------------
 
@@ -232,6 +263,9 @@ class ChaosScheduler:
         """Finalize a drained replication: install state + policy, activate."""
         done_ts = [r.handle.done_t for r in fl.transfers if r.handle.done]
         t_state_done = max(done_ts, default=fl.t_transfers_start)
+        # A replication finished by credited prefixes (remaining hit zero at
+        # cancellation) is complete at the credit instant, not earlier.
+        t_state_done = max(t_state_done, fl.t_last_credit)
         fl.timeline["state_replicated"] = t_state_done
 
         # 7. New node installs state + policy, joins the next iteration.
@@ -247,12 +281,27 @@ class ChaosScheduler:
 
     def replan_scale_out(self, fl: InflightScaleOut) -> bool:
         """Churn invalidated part of an in-flight replication: cancel the
-        affected streams and re-plan the undelivered bytes over the current
-        topology. Returns False (and aborts) when the joining node has no
-        surviving neighbors to pull from."""
+        affected streams, credit the shard-aligned prefix each stream had
+        already delivered, and re-plan only the genuinely missing bytes over
+        the current topology. Returns False (and aborts) when the joining
+        node has no surviving neighbors to pull from.
+
+        Credit granularity follows the plan: ``plan.shard_size > 0`` floors
+        each cancelled stream's delivered bytes to a whole-shard boundary
+        (partial shards are re-sent — they can't be verified/installed);
+        ``shard_size == 0`` (single-/multi-source baselines) credits the raw
+        byte prefix. With ``partial_credit`` off, cancelled streams forfeit
+        everything in flight — the pre-credit behavior."""
         now = self.sim.now
+        shard = int(fl.plan.shard_size) if self.partial_credit else 0
         for r in fl.pending():
-            r.handle.cancel()
+            r.handle.cancel(now)
+            if self.partial_credit:
+                got = int(r.handle.cancelled_delivered)
+                keep = (got // shard) * shard if shard > 0 else got
+                r.credited = min(int(keep), int(r.nbytes))
+                if r.credited > 0:
+                    fl.t_last_credit = max(fl.t_last_credit, now)
         remaining = fl.state_bytes - fl.delivered_bytes()
         if remaining <= 0:
             return True  # everything already on the new node

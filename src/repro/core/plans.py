@@ -1,4 +1,5 @@
-"""The one replication-plan path (paper §III + §VI-F ablations).
+"""The one replication-plan path (paper §III problems P1–P3, Algorithms 1–2;
+§IV-B peer negotiation consumes the plans; §VI-F ablations).
 
 Every component that turns "node X needs the training state" into "which
 source sends which bytes over which route" goes through this module: the
@@ -7,10 +8,19 @@ the real-array elastic trainer (``elastic/trainer.py`` via
 ``replication.plan_replication``), and the benchmarks. Before the refactor
 each of those carried its own copy of the plan-construction logic.
 
-``plan_assignment`` is the canonical Algorithm 1+2 entry point; it dispatches
-the greedy inner solver to the vectorized implementation on wide instances
+``plan_assignment`` is the canonical Algorithm 1+2 entry point: Algorithm 1
+binary-searches the shard size s (monotone objective on the divisibility
+chain, §III-C), Algorithm 2 greedily assigns shards to neighbors by least
+estimated load (the LPT-equivalent optimality rule). It dispatches the
+greedy inner solver to the vectorized implementation on wide instances
 (``auto_greedy_solver``), which is what keeps planning sub-millisecond at
 hundreds of neighbors.
+
+Partial-transfer credit (churn engine): a :class:`ReplicationPlan` carries
+its ``shard_size`` so that when churn cancels an in-flight stream, the
+scheduler can credit the delivered whole-shard prefix and re-plan only the
+missing suffix (``trim_tensor_sizes``) — the delta-recovery economics of
+Unicron/ElasWave applied to mid-replication churn.
 """
 from __future__ import annotations
 
@@ -30,11 +40,17 @@ from repro.core.topology import Topology
 
 @dataclass
 class ReplicationPlan:
-    """What each source sends to the new node, with predicted delay."""
+    """What each source sends to the new node, with predicted delay.
+
+    ``shard_size`` is the Algorithm-1 shard granularity in bytes; 0 for the
+    baseline strategies that stream unsharded. It doubles as the credit
+    granularity when churn interrupts the plan: a cancelled stream keeps
+    its whole-shard delivered prefix (partial shards are re-sent)."""
     strategy: str
     sources: Dict[int, int]  # source node -> bytes to send
     routes: Dict[int, List[int]]  # source node -> path to new node
     predicted_delay_s: float
+    shard_size: int = 0  # Alg-1 shard bytes; 0 = unsharded stream
 
     def summary(self) -> dict:
         """Deterministic dict for event ledgers (sorted keys, ints/floats)."""
@@ -42,6 +58,7 @@ class ReplicationPlan:
             "strategy": self.strategy,
             "sources": {str(u): int(b) for u, b in sorted(self.sources.items())},
             "predicted_delay_s": float(self.predicted_delay_s),
+            "shard_size": int(self.shard_size),
         }
 
 
@@ -77,7 +94,8 @@ def chaos_plan(
     sources = {u: len(ks) * asg.shard_size for u, ks in
                asg.shards_per_neighbor.items() if ks}
     routes = {u: [u, new_node] for u in sources}
-    return ReplicationPlan("chaos", sources, routes, asg.completion_s)
+    return ReplicationPlan("chaos", sources, routes, asg.completion_s,
+                           shard_size=int(asg.shard_size))
 
 
 def chaos_even_plan(topo, new_node, state_bytes, tensor_sizes, sync=None):
@@ -88,7 +106,8 @@ def chaos_even_plan(topo, new_node, state_bytes, tensor_sizes, sync=None):
     asg = even_assignment(k, s, nb)
     sources = {u: len(ks) * s for u, ks in asg.shards_per_neighbor.items() if ks}
     return ReplicationPlan("multi-neighbor-even", sources,
-                           {u: [u, new_node] for u in sources}, asg.completion_s)
+                           {u: [u, new_node] for u in sources}, asg.completion_s,
+                           shard_size=int(s))
 
 
 def single_source_plan(

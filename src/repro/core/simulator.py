@@ -50,24 +50,50 @@ class Sim:
 
 
 class TransferHandle:
-    """Cancellation token for an in-flight transfer.
+    """Cancellation token + byte-progress meter for an in-flight transfer.
 
     Cancelling before the scheduled delivery suppresses the completion
     callback; bandwidth already reserved on the links stays reserved (the
     bytes were on the wire when the event interrupted them — matching what a
-    real socket teardown can and cannot reclaim)."""
+    real socket teardown can and cannot reclaim).
 
-    __slots__ = ("cancelled", "done_t")
+    The handle also tracks *delivery progress*: once :meth:`Network.transfer`
+    has scheduled the stream, ``progress(now)`` reports how many bytes have
+    landed at the destination by virtual time ``now`` (the receiver drains
+    the final hop linearly at its link rate). ``cancel(now)`` snapshots that
+    value into ``cancelled_delivered`` so the churn engine can credit the
+    partial stream instead of forfeiting it — the delta-recovery idea behind
+    sub-restart self-healing (paper §IV-C taken to byte granularity)."""
+
+    __slots__ = ("cancelled", "done_t", "nbytes", "t_first_byte",
+                 "byte_rate", "cancelled_delivered")
 
     def __init__(self):
         self.cancelled = False
         self.done_t: Optional[float] = None
+        self.nbytes = 0.0  # payload size, set when the stream is scheduled
+        self.t_first_byte: Optional[float] = None  # first byte at destination
+        self.byte_rate = 0.0  # destination drain rate (bytes/s, final hop)
+        self.cancelled_delivered = 0.0  # bytes landed when cancel() fired
 
     @property
     def done(self) -> bool:
         return self.done_t is not None
 
-    def cancel(self):
+    def progress(self, now: float) -> float:
+        """Bytes delivered to the destination by virtual time ``now``."""
+        if self.done:
+            return float(self.nbytes)
+        if self.t_first_byte is None:  # cancelled before the bytes moved
+            return 0.0
+        return float(min(self.nbytes,
+                         max(0.0, (now - self.t_first_byte) * self.byte_rate)))
+
+    def cancel(self, now: Optional[float] = None):
+        """Cancel the stream; with ``now`` given, snapshot delivery progress
+        so the caller can credit the already-delivered prefix."""
+        if not self.cancelled and not self.done and now is not None:
+            self.cancelled_delivered = self.progress(now)
         self.cancelled = True
 
 
@@ -84,14 +110,16 @@ class Network:
     def _key(self, u, v):
         return (min(u, v), max(u, v))
 
-    def _hop(self, u: int, v: int, nbytes: float, t_arrive: float) -> float:
-        """Returns delivery time of the payload at v, honoring link FIFO."""
+    def _hop(self, u: int, v: int, nbytes: float,
+             t_arrive: float) -> Tuple[float, float, Link]:
+        """Returns (delivery time at v, transmission start, link), honoring
+        the link's FIFO occupancy."""
         link = self.topo.link(u, v)
         key = self._key(u, v)
         start = max(t_arrive, self._link_free.get(key, 0.0))
         done = start + link.latency_s + nbytes * link.trans_delay_per_byte
         self._link_free[key] = start + nbytes * link.trans_delay_per_byte
-        return done
+        return done, start, link
 
     def transfer(self, route: List[int], nbytes: float,
                  on_done: Callable[[float], None],
@@ -100,12 +128,24 @@ class Network:
 
         Returns a :class:`TransferHandle`; cancelling it before delivery
         suppresses ``on_done`` (used by the churn engine to invalidate
-        replications overtaken by a later churn event)."""
+        replications overtaken by a later churn event). The handle's
+        progress fields are primed from the *final* hop: the destination
+        receives its first byte once that hop's transmission window opens
+        and drains linearly at the hop's link rate, so a cancellation at
+        any virtual time knows exactly how many bytes already landed."""
         handle = handle if handle is not None else TransferHandle()
         t = self.sim.now
+        last_start, last_link = t, None
         for a, b in zip(route, route[1:]):
-            t = self._hop(a, b, nbytes, t)
+            t, last_start, last_link = self._hop(a, b, nbytes, t)
             self.bytes_on_wire += nbytes
+        handle.nbytes = float(nbytes)
+        if last_link is not None:
+            handle.t_first_byte = last_start + last_link.latency_s
+            handle.byte_rate = last_link.bytes_per_s
+        else:  # degenerate single-node route: instantly "delivered"
+            handle.t_first_byte = t
+            handle.byte_rate = float("inf")
 
         def deliver():
             if handle.cancelled:

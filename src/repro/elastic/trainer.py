@@ -16,6 +16,10 @@ synchronous data-parallel training over a device mesh that grows and shrinks
     compile the first time a given cluster size appears (then it's free);
   * each node brings its data split (paper §VI-A): the loader reshard hook
     is invoked on every membership change;
+  * link events from replayed scenario traces (degrade / sever / restore)
+    land on a per-device link-override table layered over ``link_model``,
+    so a degraded link reshapes the replication plans of later scale-outs
+    exactly as it does in the simulator;
   * straggler detection: per-step wall-time EWMA per cluster size flags
     outliers to the monitor for scale-in recommendation (τ^sync-aware shard
     planning already derates slow nodes during scale-out).
@@ -34,9 +38,15 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.engine import ChurnEngine, ChurnEvent, EventLedger
+from repro.core.engine import MIN_LINK_MBPS, ChurnEngine, ChurnEvent, EventLedger
 from repro.core.replication import plan_replication
 from repro.core.sharding_alg import NeighborLink
+from repro.core.topology import MBPS
+
+#: per-byte transmission delay standing in for a severed link: the Alg-1/2
+#: planner derates such a neighbor to (near) zero shards, so it drops out of
+#: subsequent replication plans without ever making planning infeasible.
+SEVERED_TRANS_S_PER_BYTE = 1.0
 
 
 @dataclass
@@ -61,6 +71,12 @@ class ElasticTrainer:
         self.per_device_batch = per_device_batch
         self.on_reshard = on_reshard
         self.link_model = link_model or (lambda i: NeighborLink(0.001, 1e-9, 0.0))
+        # Trace link events override the static link model per device id
+        # (degraded / severed / restored links), so replayed link churn
+        # changes the plan shapes of subsequent scale-outs. Keyed per
+        # (device, trace link) so overlapping impairments on one device
+        # don't clobber each other; the slowest surviving impairment wins.
+        self._link_overrides: Dict[int, Dict[object, NeighborLink]] = {}
         self._step_fns: Dict[int, Callable] = {}
         self.step_count = 0
         self.events: List[ScaleEvent] = []
@@ -85,6 +101,69 @@ class ElasticTrainer:
 
     def device_ids(self) -> List[int]:
         return [d.id for d in self.active]
+
+    # -- per-device link model (trace link events land here) --------------------
+
+    def effective_link(self, device_id: int) -> NeighborLink:
+        """The link the planner sees for ``device_id``: the slowest
+        trace-applied override still in force (a device with both a severed
+        and a degraded link is as bad as its worst impairment), or the
+        static link model when no override remains."""
+        ovs = self._link_overrides.get(device_id)
+        if not ovs:
+            return self.link_model(device_id)
+        return max(ovs.values(), key=lambda nl: nl.trans_s_per_byte)
+
+    def replication_neighbors(self) -> Dict[int, NeighborLink]:
+        """Measured neighbor set a joining device plans over — every active
+        device through its *effective* link (monitor §IV-A stand-in)."""
+        return {d.id: self.effective_link(d.id) for d in self.active}
+
+    def apply_link_event(self, kind: str, device_ids: Sequence[int],
+                         bandwidth_mbps: Optional[float] = None,
+                         latency_s: Optional[float] = None,
+                         link: Optional[Sequence[int]] = None):
+        """Map a trace link event onto the per-device link model.
+
+        Host-simulated devices share one interconnect, so a trace link
+        (u, v) is projected onto its endpoint devices: each named device's
+        link toward future joiners is degraded (``link-degrade``), severed
+        (``link-failure`` / ``link-leave``), or restored (``link-join`` —
+        with new parameters when given, else clearing that link's
+        impairment). Impairments are tracked per (device, trace link), so
+        restoring one link never erases another link's still-active sever
+        or degrade on the same device; :meth:`effective_link` surfaces the
+        slowest survivor. Subsequent scale-out plans are built over the
+        updated links, which is how severed or slow links change plan
+        shapes during replay."""
+        key = tuple(sorted(link)) if link is not None else None
+        # Zero/negative rates would divide-by-zero; clamp to the same floor
+        # the sim backend uses (severing is link-failure's job).
+        if bandwidth_mbps is not None:
+            bandwidth_mbps = max(float(bandwidth_mbps), MIN_LINK_MBPS)
+        for did in device_ids:
+            base = self.link_model(did)
+            ovs = self._link_overrides.setdefault(did, {})
+            if kind == "link-join":
+                if bandwidth_mbps is None:
+                    ovs.pop(key, None)
+                else:
+                    ovs[key] = NeighborLink(
+                        latency_s if latency_s is not None else base.prop_s,
+                        1.0 / (bandwidth_mbps * MBPS), base.sync_s)
+            elif kind == "link-degrade":
+                cur = ovs.get(key, base)
+                trans = (1.0 / (bandwidth_mbps * MBPS)
+                         if bandwidth_mbps is not None
+                         else cur.trans_s_per_byte)
+                ovs[key] = NeighborLink(
+                    latency_s if latency_s is not None else cur.prop_s,
+                    trans, cur.sync_s)
+            elif kind in ("link-leave", "link-failure"):
+                ovs[key] = NeighborLink(
+                    base.prop_s, SEVERED_TRANS_S_PER_BYTE, base.sync_s)
+            else:
+                raise ValueError(f"not a link event kind: {kind!r}")
 
     # -- lifecycle ---------------------------------------------------------------
 
@@ -130,8 +209,9 @@ class ElasticTrainer:
                 raise RuntimeError("device pool exhausted")
             device = candidates[0]
         t0 = time.perf_counter()
-        # Chaos plan over current members as neighbors of the joining device.
-        neighbors = {d.id: self.link_model(d.id) for d in self.active}
+        # Chaos plan over current members as neighbors of the joining device,
+        # through their effective (possibly degraded/severed) links.
+        neighbors = self.replication_neighbors()
         plan = plan_replication(self.state, neighbors)
         # Physical state movement onto the enlarged mesh.
         self.active = self.active + [device]
@@ -212,6 +292,12 @@ class TrainerBackend:
     exercises the protocol in simulation *and* on real arrays. Ledger
     records carry only deterministic fields (device ids, step indices, plan
     shapes); wall-clock timings stay in ``trainer.events``.
+
+    Link events resolve their endpoints to devices (via the trace-node map,
+    falling back to matching pool device ids) and are applied through
+    :meth:`ElasticTrainer.apply_link_event`, so degraded or severed links
+    change the plan shapes of later joins; events whose endpoints resolve to
+    no device stay ``noop-link`` for trace parity.
     """
 
     def __init__(self, trainer: ElasticTrainer, *, batch_fn=None,
@@ -284,9 +370,37 @@ class TrainerBackend:
                           {"device": device.id, "step": sev.step,
                            "n_active": len(tr.active)})
             return
-        # Host-simulated devices share one interconnect; link events are
-        # acknowledged for trace parity but have no physical effect here.
-        ledger.append(seq, ev.t, ev.kind, (ev.u, ev.v), "noop-link")
+        # Link events: project the trace link onto its endpoint devices'
+        # per-device link model. Unresolvable endpoints keep the historical
+        # noop-link acknowledgement for trace parity.
+        dev_ids = sorted({d.id for d in (self._device_for(ev.u),
+                                         self._device_for(ev.v))
+                          if d is not None and d in tr.active})
+        if not dev_ids:
+            ledger.append(seq, ev.t, ev.kind, (ev.u, ev.v), "noop-link")
+            return
+        tr.apply_link_event(ev.kind, dev_ids, bandwidth_mbps=ev.bandwidth_mbps,
+                            latency_s=ev.latency_s, link=(ev.u, ev.v))
+        action = {"link-join": "link-restored",
+                  "link-degrade": "link-degraded"}.get(ev.kind, "link-severed")
+        detail = {"devices": dev_ids}
+        if ev.bandwidth_mbps is not None:
+            detail["bandwidth_mbps"] = ev.bandwidth_mbps
+        ledger.append(seq, ev.t, ev.kind, (ev.u, ev.v), action, detail)
+
+    def _device_for(self, node):
+        """Trace node → device: the explicit map from joins/leaves first,
+        else the pool device whose id equals the trace node id (the base
+        cluster's natural labeling)."""
+        if node is None:
+            return None
+        d = self._node_device.get(node)
+        if d is not None:
+            return d
+        for d in self.trainer.pool:
+            if d.id == node:
+                return d
+        return None
 
     def drain(self, ledger: EventLedger):
         pass

@@ -2,6 +2,8 @@
 from repro.scenarios.trace import ScenarioTrace
 from repro.scenarios.generators import (
     GENERATORS,
+    adversarial_churn,
+    bandwidth_degradation,
     diurnal_waves,
     flash_crowd,
     link_flaps,
@@ -17,4 +19,6 @@ __all__ = [
     "regional_partition",
     "flash_crowd",
     "link_flaps",
+    "adversarial_churn",
+    "bandwidth_degradation",
 ]

@@ -16,6 +16,13 @@ Catalog:
   announced training run attracting participants).
 * ``link_flaps``         — correlated link-failure/link-join pairs clustered
   on one focal node's links (a flaky NIC/ToR switch).
+* ``adversarial_churn``  — targeted strikes: each join's best-bandwidth peer
+  (the likely largest replication-plan source) fails mid-replication, the
+  worst case for the engine's partial-transfer credit path.
+* ``bandwidth_degradation`` — mid-replication link-rate drops: each join's
+  fastest link collapses to a fraction of its bandwidth while the shard
+  streams are in flight (``link-degrade`` events), forcing credit-aware
+  reshuffles; optionally the rate restores later.
 """
 from __future__ import annotations
 
@@ -69,9 +76,10 @@ class _Membership:
 
 
 def _join_event(t: float, m: _Membership, rng: random.Random, *,
-                max_links: int, bw_range, lat_range, compute_range) -> ChurnEvent:
+                max_links: int, bw_range, lat_range, compute_range,
+                min_links: int = 1) -> ChurnEvent:
     node = m.new_node()
-    peers = m.pick_peers(rng.randint(1, max_links))
+    peers = m.pick_peers(rng.randint(min(min_links, max_links), max_links))
     links = {p: (rng.uniform(*bw_range), rng.uniform(*lat_range))
              for p in peers}
     ev = ChurnEvent(t=t, kind="join", node=node, links=links,
@@ -238,10 +246,116 @@ def link_flaps(
     })
 
 
+def _best_peer(links: Dict[int, Tuple[float, float]],
+               exclude: Optional[int]) -> Optional[int]:
+    """The join's highest-bandwidth peer — the neighbor Algorithm 2 loads
+    heaviest, hence the adversary's (or congestion's) natural target."""
+    cands = [(bw, p) for p, (bw, _lat) in links.items() if p != exclude]
+    if not cands:
+        return None
+    return max(cands)[1]
+
+
+def adversarial_churn(
+    base_nodes: Sequence[int], *, seed: int, horizon_s: float,
+    n_joins: int = 6, strike_delay_s: float = 1.5,
+    failure_fraction: float = 1.0, max_links: int = 3,
+    bw_range=DEFAULT_BW_RANGE, lat_range=DEFAULT_LAT_RANGE,
+    compute_range=DEFAULT_COMPUTE_RANGE,
+) -> ScenarioTrace:
+    """Targeted leaves of plan-source nodes mid-replication.
+
+    For every join, an adversary watching the overlay strikes the join's
+    best-bandwidth peer — the node Algorithm 2 assigns the most shards —
+    ``strike_delay_s`` after the join request, i.e. while that peer's shard
+    stream is still on the wire. ``failure_fraction`` of strikes are crashes
+    (node-failure), the rest graceful leaves. This is the stress case for
+    partial-transfer credit: every replication loses its largest source and
+    must re-plan, keeping only delivered/credited shards. Joins bring at
+    least two links so a strike forces a re-plan, not an abort."""
+    rng = random.Random(seed)
+    m = _Membership(base_nodes, rng)
+    events: List[ChurnEvent] = []
+    span = max(horizon_s - strike_delay_s, 0.0)
+    times = sorted(rng.uniform(0, span) for _ in range(n_joins))
+    strikes = 0
+    for t in times:
+        ev = _join_event(t, m, rng, max_links=max_links, min_links=2,
+                         bw_range=bw_range, lat_range=lat_range,
+                         compute_range=compute_range)
+        events.append(ev)
+        victim = _best_peer(ev.links, exclude=m.protected)
+        if victim is None or victim not in m.alive:
+            continue
+        kind = ("node-failure" if rng.random() < failure_fraction else "leave")
+        events.append(ChurnEvent(t=t + strike_delay_s, kind=kind, node=victim))
+        m.leave(victim)
+        strikes += 1
+    return ScenarioTrace("adversarial-churn", seed,
+                         sorted(events, key=lambda e: e.t), {
+                             "n_joins": n_joins, "strikes": strikes,
+                             "strike_delay_s": strike_delay_s,
+                             "failure_fraction": failure_fraction,
+                             "horizon_s": horizon_s,
+                         })
+
+
+def bandwidth_degradation(
+    base_nodes: Sequence[int], *, seed: int, horizon_s: float,
+    n_joins: int = 4, drop_after_s: float = 1.5,
+    drop_factor: float = 0.1, restore_after_s: Optional[float] = None,
+    max_links: int = 3, bw_range=DEFAULT_BW_RANGE,
+    lat_range=DEFAULT_LAT_RANGE, compute_range=DEFAULT_COMPUTE_RANGE,
+) -> ScenarioTrace:
+    """Mid-replication link-rate drops (congestion / tc reshaping).
+
+    Each join's fastest link — carrying the largest planned shard stream —
+    collapses to ``drop_factor`` of its bandwidth ``drop_after_s`` after the
+    join request, as a ``link-degrade`` event. The engine credits the shards
+    already delivered at the old rate and reshuffles the missing bytes over
+    the degraded topology. With ``restore_after_s`` the link later degrades
+    *back* to its original rate (another ``link-degrade``), so long traces
+    exercise both directions of rate change."""
+    rng = random.Random(seed)
+    m = _Membership(base_nodes, rng)
+    events: List[ChurnEvent] = []
+    span = max(horizon_s - drop_after_s - (restore_after_s or 0.0), 0.0)
+    times = sorted(rng.uniform(0, span) for _ in range(n_joins))
+    drops = 0
+    for t in times:
+        ev = _join_event(t, m, rng, max_links=max_links, min_links=2,
+                         bw_range=bw_range, lat_range=lat_range,
+                         compute_range=compute_range)
+        events.append(ev)
+        peer = _best_peer(ev.links, exclude=None)
+        if peer is None:
+            continue
+        bw, lat = ev.links[peer]
+        events.append(ChurnEvent(t=t + drop_after_s, kind="link-degrade",
+                                 u=peer, v=ev.node,
+                                 bandwidth_mbps=bw * drop_factor,
+                                 latency_s=lat))
+        if restore_after_s is not None:
+            events.append(ChurnEvent(
+                t=t + drop_after_s + restore_after_s, kind="link-degrade",
+                u=peer, v=ev.node, bandwidth_mbps=bw, latency_s=lat))
+        drops += 1
+    return ScenarioTrace("bandwidth-degradation", seed,
+                         sorted(events, key=lambda e: e.t), {
+                             "n_joins": n_joins, "drops": drops,
+                             "drop_after_s": drop_after_s,
+                             "drop_factor": drop_factor,
+                             "restored": restore_after_s is not None,
+                             "horizon_s": horizon_s,
+                         })
+
+
 GENERATORS = {
     "poisson-churn": poisson_churn,
     "diurnal-waves": diurnal_waves,
     "regional-partition": regional_partition,
     "flash-crowd": flash_crowd,
     "link-flaps": link_flaps,
+    "adversarial-churn": adversarial_churn,
+    "bandwidth-degradation": bandwidth_degradation,
 }

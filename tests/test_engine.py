@@ -320,7 +320,9 @@ def test_same_trace_through_elastic_trainer(tmp_path):
         actions = ledger.actions()
         assert "scale-out" in actions, actions
         assert "node-failed" in actions, actions
-        assert "noop-link" in actions, actions
+        # Link events now land on the per-device link model (severed links
+        # drop out of later plans) instead of being acknowledged as no-ops.
+        assert "link-severed" in actions, actions
         m = tr.step(batch())
         assert np.isfinite(m["loss"])
         print("OK trainer-trace", actions)

@@ -1,10 +1,14 @@
 """Scenario generators + trace format tests."""
 import json
 
+import pytest
+
 from repro.core import random_edge_topology
 from repro.core.engine import ChurnEvent
 from repro.scenarios import (
     ScenarioTrace,
+    adversarial_churn,
+    bandwidth_degradation,
     diurnal_waves,
     flash_crowd,
     link_flaps,
@@ -26,6 +30,9 @@ def test_generators_are_seed_deterministic():
         lambda: regional_partition(topo, seed=5, t_cut=10.0, heal_after_s=30.0),
         lambda: flash_crowd(nodes, seed=5, t_start=3.0, n_joins=12),
         lambda: link_flaps(topo, seed=5, horizon_s=600.0, n_flaps=9),
+        lambda: adversarial_churn(nodes, seed=5, horizon_s=600.0, n_joins=6),
+        lambda: bandwidth_degradation(nodes, seed=5, horizon_s=600.0,
+                                      n_joins=5, restore_after_s=10.0),
     ):
         assert _jsons(mk()) == _jsons(mk())
 
@@ -100,6 +107,52 @@ def test_link_flaps_pair_failure_with_restore():
         assert topo.has_link(e.u, e.v)
 
 
+def test_adversarial_churn_strikes_each_joins_best_peer():
+    topo = random_edge_topology(16, seed=2)
+    trace = adversarial_churn(topo.active_nodes(), seed=7, horizon_s=300.0,
+                              n_joins=6)
+    events = list(trace)
+    joins = [e for e in events if e.kind == "join"]
+    strikes = [e for e in events if e.kind in ("leave", "node-failure")]
+    assert len(joins) == 6
+    assert trace.meta["strikes"] == len(strikes) > 0
+    sched = min(topo.active_nodes())
+    for s in strikes:
+        # The strike follows a join by exactly strike_delay_s and hits that
+        # join's highest-bandwidth peer (the largest plan source)...
+        src = [j for j in joins
+               if j.t == pytest.approx(s.t - trace.meta["strike_delay_s"])]
+        assert len(src) == 1
+        links = src[0].links
+        best = max((bw, p) for p, (bw, _l) in links.items() if p != sched)[1]
+        assert s.node == best
+        # ...and never the protected scheduler node.
+        assert s.node != sched
+    # Joins bring ≥ 2 peers, so strikes force re-plans rather than aborts.
+    assert all(len(j.links) >= 2 for j in joins)
+
+
+def test_bandwidth_degradation_drops_each_joins_fastest_link():
+    trace = bandwidth_degradation(range(10), seed=4, horizon_s=200.0,
+                                  n_joins=5, drop_factor=0.2,
+                                  restore_after_s=8.0)
+    events = list(trace)
+    joins = {e.node: e for e in events if e.kind == "join"}
+    degrades = [e for e in events if e.kind == "link-degrade"]
+    assert trace.meta["drops"] == 5
+    assert len(degrades) == 10  # drop + restore per join
+    for d in degrades:
+        j = joins[d.v]
+        bw, lat = j.links[d.u]
+        assert bw == max(b for b, _l in j.links.values())
+        assert d.latency_s == lat
+        assert d.bandwidth_mbps in (pytest.approx(bw * 0.2), pytest.approx(bw))
+    # Every drop is paired with a restore back to the original rate.
+    restored = [d for d in degrades
+                if d.bandwidth_mbps == pytest.approx(joins[d.v].links[d.u][0])]
+    assert len(restored) == 5
+
+
 def test_churn_event_json_roundtrip():
     evs = [
         ChurnEvent(t=1.5, kind="join", node=7,
@@ -108,6 +161,8 @@ def test_churn_event_json_roundtrip():
         ChurnEvent(t=2.5, kind="link-join", u=1, v=4,
                    bandwidth_mbps=200.0, latency_s=0.004),
         ChurnEvent(t=3.0, kind="link-failure", u=1, v=4),
+        ChurnEvent(t=4.0, kind="link-degrade", u=2, v=5,
+                   bandwidth_mbps=25.0, latency_s=0.02),
     ]
     for e in evs:
         back = ChurnEvent.from_json(json.loads(json.dumps(e.to_json())))

@@ -1,0 +1,66 @@
+#!/usr/bin/env python3
+"""Markdown link check for the docs CI job (stdlib only, no network).
+
+Verifies that every relative link target in the given markdown files (or
+every ``*.md`` under given directories) exists in the repository. External
+``http(s)://`` / ``mailto:`` links are skipped — CI has no business
+depending on the network — and ``#anchor`` fragments are stripped before
+the existence check.
+
+Usage:
+    python tools/check_markdown_links.py README.md docs src/repro/scenarios/README.md
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# [text](target) — won't match images' leading "!" specially; that's fine,
+# image targets must exist too. Ignores targets containing spaces-only.
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def md_files(args: list[str]) -> list[Path]:
+    out: list[Path] = []
+    for a in args:
+        p = Path(a)
+        if p.is_dir():
+            out.extend(sorted(p.rglob("*.md")))
+        else:
+            out.append(p)
+    return out
+
+
+def check(paths: list[Path]) -> list[str]:
+    errors = []
+    for md in paths:
+        if not md.exists():
+            errors.append(f"{md}: file not found")
+            continue
+        for n, line in enumerate(md.read_text().splitlines(), 1):
+            for target in LINK_RE.findall(line):
+                if target.startswith(SKIP_PREFIXES):
+                    continue
+                rel = target.split("#", 1)[0]
+                if not rel:
+                    continue
+                resolved = (md.parent / rel).resolve()
+                if not resolved.exists():
+                    errors.append(f"{md}:{n}: broken link -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    paths = md_files(argv or ["README.md", "docs", "ROADMAP.md"])
+    errors = check(paths)
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(paths)} markdown file(s): "
+          f"{'OK' if not errors else f'{len(errors)} broken link(s)'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
