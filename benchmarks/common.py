@@ -82,7 +82,8 @@ def measure_midstream_link_failure(n_nodes: int, state_bytes: int,
                                    tensor_sizes, *, seed: int = 0,
                                    fail_after_s: float = 1.0,
                                    partial_credit: bool = True,
-                                   train_iters: int = 1):
+                                   train_iters: int = 1,
+                                   detected: bool = False):
     """Scale-out whose fastest shard stream is severed mid-replication.
 
     The joining node's best-bandwidth link fails ``fail_after_s`` after the
@@ -91,6 +92,11 @@ def measure_midstream_link_failure(n_nodes: int, state_bytes: int,
     ``partial_credit`` the delivered shard prefixes stay on the joining node
     and only the missing bytes are re-planned; without it (the pre-credit
     baseline) every in-flight byte is forfeited and re-sent.
+
+    With ``detected`` the trace injects a silent ``link-fault`` instead of
+    the omniscient ``link-failure``: the monitor's probe sweeps must notice
+    the dead link, and the returned record carries the fault-to-detection
+    latency alongside the handling cost.
     """
     topo = random_edge_topology(n_nodes, seed=seed)
     cl = make_cluster(topo, state_bytes=state_bytes,
@@ -104,7 +110,9 @@ def measure_midstream_link_failure(n_nodes: int, state_bytes: int,
         ChurnEvent(t=t0, kind="join", node=new,
                    links={p: (l.bandwidth_mbps, l.latency_s)
                           for p, l in links.items()}),
-        ChurnEvent(t=t0 + fail_after_s, kind="link-failure", u=victim, v=new),
+        ChurnEvent(t=t0 + fail_after_s,
+                   kind="link-fault" if detected else "link-failure",
+                   u=victim, v=new),
     ]
     ledger, results = run_trace_sim(cl, events, partial_credit=partial_credit)
     replanned = [r for r in ledger if r.action == "replanned"]
@@ -116,6 +124,69 @@ def measure_midstream_link_failure(n_nodes: int, state_bytes: int,
                               for r in replanned),
         "replanned_bytes": sum(r.detail.get("replanned_bytes", 0)
                                for r in replanned),
+        "events": detection_rows(ledger),
+        "ledger": ledger,
+    }
+
+
+def detection_rows(ledger):
+    """Per-event detection/handling breakdown off a ledger: every handled
+    failure/departure with its ``detection_s`` (0 for omniscient events —
+    the trace told the engine directly) and ``handling_s`` (the blocking
+    portion, Table I semantics)."""
+    rows = []
+    for r in ledger:
+        if r.action in ("node-failed", "scaled-in", "link-failed",
+                        "link-disconnected"):
+            rows.append({
+                "kind": r.kind,
+                "subject": tuple(r.subject),
+                "fault_t": r.detail.get("fault_t"),
+                "detected_t": r.detail.get("detected_t"),
+                "detection_s": r.detail.get("detection_s", 0.0),
+                "handling_s": r.detail.get("blocking_s", 0.0),
+            })
+    return rows
+
+
+def measure_failure_recovery(n_nodes: int, state_bytes: int, tensor_sizes,
+                             *, seed: int = 0, detected: bool = True,
+                             fail_after_s: float = 1.0, train_iters: int = 1):
+    """Failure-to-recovery for a plan-source node dying mid-replication:
+    omnisciently (``node-failure`` in the trace — handling only, the pre-PR
+    semantics) or detection-driven (``node-fault`` — the heartbeat sweeps
+    must notice first, so the number includes detection latency).
+    """
+    topo = random_edge_topology(n_nodes, seed=seed)
+    cl = make_cluster(topo, state_bytes=state_bytes,
+                      tensor_sizes=tensor_sizes, strategy="chaos")
+    cl.train(train_iters)
+    new = 1000 + seed
+    links = join_links(topo, new, 3, seed + 7)
+    sched_node = cl.scheduler.node
+    candidates = {p: l for p, l in links.items() if p != sched_node} or links
+    victim = max(candidates, key=lambda p: candidates[p].bandwidth_mbps)
+    t0 = cl.sim.now
+    events = [
+        ChurnEvent(t=t0, kind="join", node=new,
+                   links={p: (l.bandwidth_mbps, l.latency_s)
+                          for p, l in links.items()}),
+        ChurnEvent(t=t0 + fail_after_s,
+                   kind="node-fault" if detected else "node-failure",
+                   node=victim),
+    ]
+    ledger, results = run_trace_sim(cl, events)
+    rows = [r for r in detection_rows(ledger)
+            if r["kind"] in ("node-failure", "node-fault")]
+    detection_s = rows[0]["detection_s"] if rows else float("nan")
+    handling_s = rows[0]["handling_s"] if rows else float("nan")
+    join = results.get(0)
+    return {
+        "detection_s": detection_s,
+        "handling_s": handling_s,
+        "failure_to_recovery_s": detection_s + handling_s,
+        "join_delay_s": join.delay_s if join is not None else float("nan"),
+        "events": detection_rows(ledger),
         "ledger": ledger,
     }
 

@@ -13,7 +13,11 @@ the pre-credit forfeit-everything behavior, and diffs the replanned bytes.
 
 ``--smoke`` runs the credit A/B on one small configuration (CI wiring
 check): credited bytes must be positive and the credited replan must move
-strictly fewer bytes than the pre-credit baseline.
+strictly fewer bytes than the pre-credit baseline. It also replays the
+same failure as a silent ``link-fault`` the monitor's probe sweeps must
+*detect*, reporting per-event ``detection_s`` (fault → detection) and
+``handling_s`` (blocking portion) separately — the honest end-to-end
+failure cost the omniscient trace hides.
 """
 from __future__ import annotations
 
@@ -90,9 +94,26 @@ def smoke() -> int:
     print(f"with credit: replanned={post['replanned_bytes'] / MiB:.2f} MiB "
           f"credited={post['credited_bytes'] / MiB:.2f} MiB "
           f"delay={post['delay_s']:.3f}s")
+    # Detection-driven replay of the same failure: the probe sweeps must
+    # notice the blackholed link before the engine can react.
+    det = measure_midstream_link_failure(8, state, sizes, seed=3,
+                                         detected=True)
+    print("\n# per-event detection/handling (detected link-fault)")
+    print("kind,subject,fault_t,detected_t,detection_s,handling_s")
+    for e in det["events"]:
+        print(f"{e['kind']},{e['subject']},"
+              f"{'' if e['fault_t'] is None else round(e['fault_t'], 3)},"
+              f"{'' if e['detected_t'] is None else round(e['detected_t'], 3)},"
+              f"{e['detection_s']:.4f},{e['handling_s']:.6f}")
+    detected_evs = [e for e in det["events"]
+                    if e["kind"] == "link-failure" and e["fault_t"] is not None]
     ok = (post["credited_bytes"] > 0
           and post["replanned_bytes"] < pre["replanned_bytes"]
-          and post["delay_s"] <= pre["delay_s"])
+          and post["delay_s"] <= pre["delay_s"]
+          and len(detected_evs) == 1
+          and detected_evs[0]["detection_s"] > 0
+          and detected_evs[0]["handling_s"] < detected_evs[0]["detection_s"]
+          and det["delay_s"] >= post["delay_s"])  # detection isn't free
     print("SMOKE_OK" if ok else "SMOKE_FAILED")
     return 0 if ok else 1
 

@@ -11,6 +11,14 @@ unifies them:
 * ``ChurnEvent``      — one churn occurrence (join / leave / node-failure /
   link-join / link-leave / link-failure / link-degrade), JSON-serializable;
   scenario traces (``repro.scenarios``) are just ordered lists of these.
+  Three *fault* kinds (node-fault / link-fault / link-loss) inject silent
+  failures instead: the subject goes bad but no churn event is emitted —
+  the cluster monitor's periodic heartbeat/probe sweeps (paper §IV-A) must
+  *detect* the failure and synthesize the corresponding node-failure /
+  link-failure into the pipeline, with the ledger recording ``fault_t``,
+  ``detected_t`` and ``detection_s`` so benchmarks report honest
+  failure-to-recovery numbers (detection + handling) instead of omniscient
+  handling alone.
 * ``EventLedger``     — the deterministic record of what the pipeline did
   with each event. Same seed ⇒ byte-identical ledger (``canonical_bytes``),
   which is what makes chaotic runs reproducible and diffable.
@@ -41,7 +49,9 @@ from repro.core.negotiation import InflightScaleOut, SimCluster
 from repro.core.topology import Link
 
 EVENT_KINDS = ("join", "leave", "node-failure",
-               "link-join", "link-leave", "link-failure", "link-degrade")
+               "link-join", "link-leave", "link-failure", "link-degrade",
+               # silent faults: no churn emitted, the monitor must detect
+               "node-fault", "link-fault", "link-loss")
 
 #: floor for link-degrade rates: degrading to ≤ 0 Mbit/s would break the
 #: transfer-time model (divide by zero); severing is link-failure's job.
@@ -54,31 +64,37 @@ class ChurnEvent:
     simulator; the trainer backend treats it as ordering only."""
     t: float
     kind: str  # one of EVENT_KINDS
-    node: Optional[int] = None  # join / leave / node-failure
+    node: Optional[int] = None  # join / leave / node-failure / node-fault
     u: Optional[int] = None  # link events
     v: Optional[int] = None
     links: Optional[Dict[int, Tuple[float, float]]] = None  # peer -> (mbps, lat_s)
     compute_s: float = 1.0
     bandwidth_mbps: Optional[float] = None  # link-join / link-degrade: new rate
     latency_s: Optional[float] = None  # link-join / link-degrade: new latency
+    loss_rate: Optional[float] = None  # link-loss: probe drop probability
 
     def __post_init__(self):
         if self.kind not in EVENT_KINDS:
             raise ValueError(f"unknown churn event kind {self.kind!r}")
 
     def to_json(self) -> dict:
+        # Every field serializes on `is None` checks (not truthiness), so an
+        # empty links dict or an explicit 0.0 latency survives the round-trip.
         out = {"t": self.t, "kind": self.kind}
         if self.node is not None:
             out["node"] = self.node
         if self.u is not None:
             out["u"], out["v"] = self.u, self.v
-        if self.links:
+        if self.links is not None:
             out["links"] = {str(p): [bw, lat] for p, (bw, lat)
                             in sorted(self.links.items())}
             out["compute_s"] = self.compute_s
         if self.bandwidth_mbps is not None:
             out["bandwidth_mbps"] = self.bandwidth_mbps
+        if self.latency_s is not None:
             out["latency_s"] = self.latency_s
+        if self.loss_rate is not None:
+            out["loss_rate"] = self.loss_rate
         return out
 
     @classmethod
@@ -90,7 +106,8 @@ class ChurnEvent:
                    u=d.get("u"), v=d.get("v"), links=links,
                    compute_s=float(d.get("compute_s", 1.0)),
                    bandwidth_mbps=d.get("bandwidth_mbps"),
-                   latency_s=d.get("latency_s"))
+                   latency_s=d.get("latency_s"),
+                   loss_rate=d.get("loss_rate"))
 
     def link_objects(self) -> Dict[int, Link]:
         return {p: Link(bw, lat) for p, (bw, lat) in (self.links or {}).items()}
@@ -199,7 +216,7 @@ class SimBackend:
 
     def __init__(self, cluster: SimCluster, *, min_active: int = 2,
                  solver_charge_s=DEFAULT_SOLVER_CHARGE_S,
-                 partial_credit: bool = True):
+                 partial_credit: bool = True, detection_seed: int = 0):
         self.cluster = cluster
         self.min_active = min_active
         self.inflight: List[InflightScaleOut] = []
@@ -208,16 +225,30 @@ class SimBackend:
         cluster.scheduler.solver_time_model = (
             None if solver_charge_s == "measured" else float(solver_charge_s))
         cluster.scheduler.partial_credit = bool(partial_credit)
+        # Detection wiring: the monitor's sweeps report detected failures
+        # here so they re-enter the pipeline as synthesized churn events.
+        # Sweeps stay off until the first fault event, so omniscient traces
+        # replay exactly as before.
+        self.detection_seed = int(detection_seed)
+        self._fault_seq: Dict[Tuple, int] = {}  # fault subject -> trace seq
+        self._detection: Optional[dict] = None  # fault_t/detected_t context
+        self._ledger: Optional[EventLedger] = None
+        mon = cluster.scheduler.monitor
+        mon.on_node_detected = self._node_failure_detected
+        mon.on_link_detected = self._link_failure_detected
+        mon.on_fault_cleared = self._fault_cleared
 
     # -- engine protocol -----------------------------------------------------
 
     def advance_to(self, t: float, ledger: EventLedger):
+        self._ledger = ledger
         sim = self.cluster.sim
         if t > sim.now:
             sim.run(until=t)
         self._pump(ledger)
 
     def handle(self, seq: int, ev: ChurnEvent, ledger: EventLedger):
+        self._ledger = ledger
         dispatch = {
             "join": self._on_join,
             "leave": self._on_leave,
@@ -226,12 +257,35 @@ class SimBackend:
             "link-leave": self._on_link_down,
             "link-failure": self._on_link_down,
             "link-degrade": self._on_link_degrade,
+            "node-fault": self._on_node_fault,
+            "link-fault": self._on_link_fault,
+            "link-loss": self._on_link_loss,
         }
         dispatch[ev.kind](seq, ev, ledger)
 
     def drain(self, ledger: EventLedger):
-        self.cluster.sim.run()
-        self._pump(ledger)
+        """Drain transfers AND outstanding detections: monitor sweeps are
+        daemon events (they never keep ``sim.run()`` alive), so after real
+        work drains we keep advancing the clock until every injected fault
+        has been detected — or deterministically given up on (a lossy link
+        that never tripped the consecutive-failure threshold)."""
+        self._ledger = ledger
+        sim = self.cluster.sim
+        mon = self.sched.monitor
+        while True:
+            sim.run()
+            self._pump(ledger)
+            deadline = mon.pending_fault_deadline()
+            if deadline is None:
+                break
+            sim.run(until=max(deadline, sim.now))
+            self._pump(ledger)
+            for kind, subject, fault_t in mon.expire_faults(sim.now):
+                key = (("node", subject[0]) if kind == "node-fault"
+                       else ("link", subject))
+                seq = self._fault_seq.pop(key, -1)
+                ledger.append(seq, sim.now, kind, subject, "fault-undetected",
+                              {"fault_t": fault_t})
 
     # -- helpers -------------------------------------------------------------
 
@@ -276,6 +330,7 @@ class SimBackend:
                 continue
             seq = self._inflight_seq.get(fl.new_node, -1)
             if self.sched.replan_scale_out(fl):
+                self._stall_faulted_streams(fl)
                 delivered = fl.delivered_bytes()
                 ledger.append(seq, self.cluster.sim.now, "join", fl.new_node,
                               "replanned", {
@@ -310,6 +365,7 @@ class SimBackend:
         fl = self.sched.begin_scale_out(node, links, self.cluster.state_bytes,
                                         self.cluster.tensor_sizes,
                                         compute_s=ev.compute_s)
+        self._stall_faulted_streams(fl)
         self.inflight.append(fl)
         self._inflight_seq[node] = seq
         ledger.append(seq, ev.t, ev.kind, node, "scale-out-started", {
@@ -320,6 +376,7 @@ class SimBackend:
     def _on_leave(self, seq: int, ev: ChurnEvent, ledger: EventLedger):
         node = ev.node
         failure = ev.kind == "node-failure"
+        det = dict(self._detection or {})  # monitor-detected: fault_t etc.
         # The joining node itself dying aborts its replication outright.
         for fl in list(self.inflight):
             if fl.new_node == node:
@@ -328,23 +385,29 @@ class SimBackend:
                 s = self._inflight_seq.pop(node, -1)
                 ledger.append(s, ev.t, "join", node, "aborted",
                               {"delivered_bytes": fl.delivered_bytes()})
-                ledger.append(seq, ev.t, ev.kind, node, "aborted-inflight-join")
+                ledger.append(seq, ev.t, ev.kind, node,
+                              "aborted-inflight-join", det)
                 return
         info = self.topo.nodes.get(node)
         if info is None or info.state != "active":
-            ledger.append(seq, ev.t, ev.kind, node, "skipped-not-active")
+            ledger.append(seq, ev.t, ev.kind, node, "skipped-not-active", det)
             return
         if node == self.sched.node:
-            ledger.append(seq, ev.t, ev.kind, node, "skipped-scheduler-node")
+            ledger.append(seq, ev.t, ev.kind, node, "skipped-scheduler-node",
+                          det)
             return
-        if len(self.topo.active_nodes()) <= self.min_active:
+        if len(self.topo.active_nodes()) <= self.min_active and not det:
+            # The floor only blocks *policy* departures. A monitor-detected
+            # death proceeds regardless: the node is physically gone, and
+            # skipping would leave its stalled shard streams frozen forever.
             ledger.append(seq, ev.t, ev.kind, node, "skipped-min-cluster")
             return
-        res = self.sched.scale_in(node, failure=failure)
+        res = self.sched.scale_in(node, failure=failure,
+                                  fault_t=det.get("fault_t"))
         self.results[seq] = res
         ledger.append(seq, ev.t, ev.kind, node,
                       "node-failed" if failure else "scaled-in",
-                      {"blocking_s": res.delay_s})
+                      {"blocking_s": res.delay_s, **det})
         # The departure may have severed in-flight shard streams.
         self._replan_touched(ledger, node=node)
 
@@ -356,8 +419,14 @@ class SimBackend:
         if self.topo.has_link(u, v):
             ledger.append(seq, ev.t, ev.kind, (u, v), "skipped-link-exists")
             return
-        link = Link(ev.bandwidth_mbps or 100.0, ev.latency_s or 0.01)
-        res = self.sched.connect_link(u, v, link)
+        # `is None` (not truthiness): an explicit 0.0 latency is a real
+        # zero-propagation link, not a request for the default. Rates are
+        # clamped to the same floor link-degrade uses — a 0 Mbit/s link
+        # would divide-by-zero the transfer model.
+        bw = (100.0 if ev.bandwidth_mbps is None
+              else max(float(ev.bandwidth_mbps), MIN_LINK_MBPS))
+        lat = 0.01 if ev.latency_s is None else float(ev.latency_s)
+        res = self.sched.connect_link(u, v, Link(bw, lat))
         self.results[seq] = res
         ledger.append(seq, ev.t, ev.kind, (u, v), "link-connected",
                       {"blocking_s": res.delay_s})
@@ -365,14 +434,16 @@ class SimBackend:
     def _on_link_down(self, seq: int, ev: ChurnEvent, ledger: EventLedger):
         u, v = ev.u, ev.v
         failure = ev.kind == "link-failure"
+        det = dict(self._detection or {})
         if not self.topo.has_link(u, v):
-            ledger.append(seq, ev.t, ev.kind, (u, v), "skipped-no-link")
+            ledger.append(seq, ev.t, ev.kind, (u, v), "skipped-no-link", det)
             return
-        res = self.sched.disconnect_link(u, v, failure=failure)
+        res = self.sched.disconnect_link(u, v, failure=failure,
+                                         fault_t=det.get("fault_t"))
         self.results[seq] = res
         ledger.append(seq, ev.t, ev.kind, (u, v),
                       "link-failed" if failure else "link-disconnected",
-                      {"blocking_s": res.delay_s})
+                      {"blocking_s": res.delay_s, **det})
         self._replan_touched(ledger, link=(u, v))
 
     def _on_link_degrade(self, seq: int, ev: ChurnEvent, ledger: EventLedger):
@@ -399,15 +470,173 @@ class SimBackend:
         })
         self._replan_touched(ledger, link=(u, v))
 
+    # -- fault injection + monitor-driven detection ----------------------------
+    #
+    # Fault events change the world silently: no churn is emitted, the
+    # monitor's periodic sweeps (started lazily on the first fault, so
+    # omniscient traces replay byte-identically) must notice and synthesize
+    # the corresponding node-failure / link-failure back into this backend.
+
+    def _start_sweeps(self):
+        self.sched.monitor.start_sweeps(seed=self.detection_seed)
+
+    @staticmethod
+    def _route_uses_link(route, key) -> bool:
+        return any((min(a, b), max(a, b)) == key
+                   for a, b in zip(route, route[1:]))
+
+    def _stall_touched(self, *, node=None, link=None):
+        """Freeze in-flight shard streams a silent fault just killed: the
+        bytes stop flowing immediately, but the engine doesn't learn why
+        until the monitor detects the fault — that gap is the detection
+        latency the benchmarks measure."""
+        now = self.cluster.sim.now
+        key = (min(link), max(link)) if link is not None else None
+        for fl in self.inflight:
+            for r in fl.pending():
+                if node is not None and (r.source == node or node in r.route):
+                    r.handle.stall(now)
+                elif key is not None and self._route_uses_link(r.route, key):
+                    r.handle.stall(now)
+
+    def _stall_faulted_streams(self, fl):
+        """Streams *planned after* a silent fault die just as dead: the
+        scheduler doesn't know the subject is bad (no omniscient filtering
+        at plan time), so the plan may source from a silent node or route
+        over a blackholed link — those bytes simply never flow, and the
+        eventual detection re-plans them."""
+        mon = self.sched.monitor
+        bad_nodes = mon.faulted_nodes()
+        bad_links = mon.faulted_links()
+        if not bad_nodes and not bad_links:
+            return
+        now = self.cluster.sim.now
+        for r in fl.pending():
+            if any(n == r.source or n in r.route for n in bad_nodes):
+                r.handle.stall(now)
+            elif any(self._route_uses_link(r.route, k) for k in bad_links):
+                r.handle.stall(now)
+
+    def _on_node_fault(self, seq: int, ev: ChurnEvent, ledger: EventLedger):
+        node = ev.node
+        info = self.topo.nodes.get(node)
+        live = info is not None and info.state in ("active", "standby")
+        if not live:
+            ledger.append(seq, ev.t, ev.kind, node, "skipped-not-active")
+            return
+        if node == self.sched.node:
+            # The monitor lives on the scheduler node; it cannot detect its
+            # own silence (scheduler fail-over is out of scope).
+            ledger.append(seq, ev.t, ev.kind, node, "skipped-scheduler-node")
+            return
+        if self.sched.monitor.node_faulted(node):
+            # Re-faulting a subject already pending detection would orphan
+            # the first fault's ledger trail (every fault-injected record
+            # must reach exactly one terminal record).
+            ledger.append(seq, ev.t, ev.kind, node, "skipped-duplicate-fault")
+            return
+        self._start_sweeps()
+        self.sched.monitor.inject_node_fault(node)
+        self._stall_touched(node=node)
+        self._fault_seq[("node", node)] = seq
+        ledger.append(seq, ev.t, ev.kind, node, "fault-injected")
+
+    def _on_link_fault(self, seq: int, ev: ChurnEvent, ledger: EventLedger):
+        u, v = min(ev.u, ev.v), max(ev.u, ev.v)
+        if not self.topo.has_link(u, v):
+            ledger.append(seq, ev.t, ev.kind, (u, v), "skipped-no-link")
+            return
+        if self.sched.monitor.link_fault_pending(u, v):
+            ledger.append(seq, ev.t, ev.kind, (u, v),
+                          "skipped-duplicate-fault")
+            return
+        self._start_sweeps()
+        self.sched.monitor.inject_link_fault(u, v)
+        self._stall_touched(link=(u, v))
+        self._fault_seq[("link", (u, v))] = seq
+        ledger.append(seq, ev.t, ev.kind, (u, v), "fault-injected")
+
+    def _on_link_loss(self, seq: int, ev: ChurnEvent, ledger: EventLedger):
+        u, v = min(ev.u, ev.v), max(ev.u, ev.v)
+        if not self.topo.has_link(u, v):
+            ledger.append(seq, ev.t, ev.kind, (u, v), "skipped-no-link")
+            return
+        if self.sched.monitor.link_fault_pending(u, v):
+            ledger.append(seq, ev.t, ev.kind, (u, v),
+                          "skipped-duplicate-fault")
+            return
+        loss = 1.0 if ev.loss_rate is None else float(ev.loss_rate)
+        self._start_sweeps()
+        self.sched.monitor.inject_link_loss(u, v, loss)
+        if loss >= 1.0:
+            # Total loss blackholes the data plane exactly like link-fault:
+            # in-flight shard bytes stop at the fault instant, not at
+            # detection. (Partial loss degrades goodput — probes-only for
+            # now; see the ROADMAP detection-refinement item.)
+            self._stall_touched(link=(u, v))
+        self._fault_seq[("link", (u, v))] = seq
+        ledger.append(seq, ev.t, ev.kind, (u, v), "fault-injected",
+                      {"loss_rate": loss})
+
+    def _detection_detail(self, fault_t: Optional[float],
+                          detected_t: float) -> dict:
+        det = {"detected_t": detected_t}
+        if fault_t is not None:
+            det["fault_t"] = fault_t
+            det["detection_s"] = detected_t - fault_t
+        return det
+
+    def _node_failure_detected(self, node: int, fault_t: Optional[float],
+                               detected_t: float):
+        """Heartbeat sweep declared ``node`` dead: synthesize the
+        node-failure the omniscient trace would have carried, under the
+        originating fault's trace seq."""
+        if self._ledger is None:
+            return  # monitor used outside an engine run
+        seq = self._fault_seq.pop(("node", node), -1)
+        ev = ChurnEvent(t=detected_t, kind="node-failure", node=node)
+        self._detection = self._detection_detail(fault_t, detected_t)
+        try:
+            self._on_leave(seq, ev, self._ledger)
+        finally:
+            self._detection = None
+
+    def _link_failure_detected(self, u: int, v: int,
+                               fault_t: Optional[float], detected_t: float):
+        """Probe sweep hit the consecutive-failure threshold on (u, v)."""
+        if self._ledger is None:
+            return
+        seq = self._fault_seq.pop(("link", (min(u, v), max(u, v))), -1)
+        ev = ChurnEvent(t=detected_t, kind="link-failure", u=u, v=v)
+        self._detection = self._detection_detail(fault_t, detected_t)
+        try:
+            self._on_link_down(seq, ev, self._ledger)
+        finally:
+            self._detection = None
+
+    def _fault_cleared(self, kind: str, subject: Tuple, fault_t: float):
+        """A pending fault became moot before detection — its subject was
+        removed by other churn (the faulted node left, the faulted link's
+        endpoint died, the link was reconnected). Close the fault's ledger
+        trail so every injected fault reaches a terminal record."""
+        if self._ledger is None:
+            return
+        key = (("node", subject[0]) if kind == "node-fault"
+               else ("link", tuple(subject)))
+        seq = self._fault_seq.pop(key, -1)
+        self._ledger.append(seq, self.cluster.sim.now, kind, subject,
+                            "fault-cleared", {"fault_t": fault_t})
+
 
 def run_trace_sim(cluster: SimCluster, events: Iterable[ChurnEvent],
                   *, min_active: int = 2,
                   solver_charge_s=SimBackend.DEFAULT_SOLVER_CHARGE_S,
-                  partial_credit: bool = True,
+                  partial_credit: bool = True, detection_seed: int = 0,
                   ) -> Tuple[EventLedger, Dict[int, object]]:
     """Replay a churn trace through the engine on a simulated cluster."""
     engine = ChurnEngine(SimBackend(cluster, min_active=min_active,
                                     solver_charge_s=solver_charge_s,
-                                    partial_credit=partial_credit))
+                                    partial_credit=partial_credit,
+                                    detection_seed=detection_seed))
     ledger = engine.run(events)
     return ledger, engine.results

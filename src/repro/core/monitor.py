@@ -2,20 +2,36 @@
 detection (control messages, heartbeats, probes), and on-demand network
 resource measurement. Runs inside the discrete-event simulator; on a real
 deployment the same interface is backed by host agents + iperf probes.
+
+Detection is *active*: :meth:`ClusterMonitor.start_sweeps` schedules periodic
+heartbeat and probe sweeps as daemon events on the virtual clock. Faults
+injected with :meth:`inject_node_fault` / :meth:`inject_link_fault` /
+:meth:`inject_link_loss` change what the sweeps observe (a silent node stops
+refreshing its heartbeat, a faulted link fails every probe, a lossy link
+drops probes with probability ``loss_rate``) — the monitor then *detects*
+the failure once ``HEARTBEAT_TIMEOUT_S`` lapses or
+``PROBE_FAILURES_FOR_LINK_DOWN`` consecutive probes fail, and reports it
+through ``on_node_detected`` / ``on_link_detected`` together with the
+injection time, so callers can measure fault-to-detection latency.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+import random
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Set, Tuple
 
 from repro.core.simulator import Network, Sim
 from repro.core.topology import Link, Topology
 
 HEARTBEAT_PERIOD_S = 2.0
 HEARTBEAT_TIMEOUT_S = 6.0
+PROBE_PERIOD_S = 1.0
 PROBE_FAILURES_FOR_LINK_DOWN = 2
 MEASURE_SECONDS = 0.5  # iperf-style bandwidth probe duration per link
+#: probe sweeps a lossy link gets before the engine's drain gives up on a
+#: deterministic detection deadline (the threshold needs *consecutive*
+#: failures, which a low loss rate may never produce).
+LOSS_GIVEUP_SWEEPS = 32
 
 
 @dataclass
@@ -37,7 +53,31 @@ class ClusterMonitor:
         self.events: List[EventRecord] = []
         self.on_node_failure: Optional[Callable[[int], None]] = None
         self.on_link_failure: Optional[Callable[[int, int], None]] = None
+        #: detection-aware callbacks: (subject…, fault_t | None, detected_t).
+        #: When set they take precedence over the legacy callbacks above.
+        self.on_node_detected: Optional[
+            Callable[[int, Optional[float], float], None]] = None
+        self.on_link_detected: Optional[
+            Callable[[int, int, Optional[float], float], None]] = None
+        #: an injected fault became moot before detection (its subject was
+        #: removed by other churn): (fault kind, subject tuple, fault_t).
+        self.on_fault_cleared: Optional[
+            Callable[[str, Tuple, float], None]] = None
         self._probe_failures: Dict[Tuple[int, int], int] = {}
+        # Injected faults awaiting detection: subject -> injection time.
+        self._node_faults: Dict[int, float] = {}
+        self._link_faults: Dict[Tuple[int, int], float] = {}
+        self._link_loss: Dict[Tuple[int, int], Tuple[float, float]] = {}
+        self._silenced: Set[int] = set()  # detected-dead, pending removal
+        self.heartbeat_period = HEARTBEAT_PERIOD_S
+        self.heartbeat_timeout = HEARTBEAT_TIMEOUT_S
+        self.probe_period = PROBE_PERIOD_S
+        self.sweeps_on = False
+        self._probe_rng: Optional[random.Random] = None
+
+    @staticmethod
+    def _key(u: int, v: int) -> Tuple[int, int]:
+        return (min(u, v), max(u, v))
 
     # -- topology bookkeeping -------------------------------------------------
 
@@ -53,6 +93,7 @@ class ClusterMonitor:
         for peer, link in links.items():
             self.topo.add_link(node_id, peer, link)
         self.last_heartbeat[node_id] = self.sim.now
+        self._silenced.discard(node_id)
         self.record("join", node_id)
         return info
 
@@ -64,7 +105,179 @@ class ClusterMonitor:
             self.topo.nodes[node_id].state = "failed" if failure else "left"
             self.topo.g.remove_node(node_id)
             self.topo.g.add_node(node_id)  # keep id known, no links
+        # A departed node can't heartbeat, answer probes, or stay faulted:
+        # drop every piece of monitor state that references it, so a later
+        # re-join starts with clean counters. Pending faults the departure
+        # absorbs are reported as cleared, not silently forgotten.
+        self.last_heartbeat.pop(node_id, None)
+        fault_t = self._node_faults.pop(node_id, None)
+        if fault_t is not None and self.on_fault_cleared:
+            self.on_fault_cleared("node-fault", (node_id,), fault_t)
+        self._silenced.discard(node_id)
+        self._drop_link_state_for(node_id)
         self.record("node-failure" if failure else "leave", node_id)
+
+    def reset_link(self, u: int, v: int):
+        """A link was (re-)established or removed: its probe-failure counter
+        and any injected fault are moot. Without this a re-connected link
+        inherits the old consecutive-failure count and can be declared down
+        after a single failed probe."""
+        key = self._key(u, v)
+        self._probe_failures.pop(key, None)
+        self._clear_link_fault(key)
+
+    def _clear_link_fault(self, key: Tuple[int, int]):
+        fault_t = self._link_faults.pop(key, None)
+        if fault_t is not None and self.on_fault_cleared:
+            self.on_fault_cleared("link-fault", key, fault_t)
+        loss = self._link_loss.pop(key, None)
+        if loss is not None and self.on_fault_cleared:
+            self.on_fault_cleared("link-loss", key, loss[1])
+
+    def _drop_link_state_for(self, node: int):
+        for key in [k for k in self._probe_failures if node in k]:
+            del self._probe_failures[key]
+        for key in sorted(set(self._link_faults) | set(self._link_loss)):
+            if node in key:
+                self._clear_link_fault(key)
+
+    # -- fault injection (silent failures the sweeps must detect) --------------
+
+    def inject_node_fault(self, node: int):
+        """The node goes silent (crash, hang, severed management plane): it
+        stops heartbeating but no churn event is emitted — detection is the
+        heartbeat sweep's job."""
+        self._node_faults.setdefault(node, self.sim.now)
+        self.record("node-fault", node, "injected")
+
+    def inject_link_fault(self, u: int, v: int):
+        """The link silently blackholes traffic: every probe on it fails."""
+        self._link_faults.setdefault(self._key(u, v), self.sim.now)
+        self.record("link-fault", self._key(u, v), "injected")
+
+    def inject_link_loss(self, u: int, v: int, loss_rate: float):
+        """The link starts dropping probes with probability ``loss_rate``.
+        Detection is probabilistic (the threshold needs consecutive losses)
+        but deterministic per sweep seed."""
+        key = self._key(u, v)
+        self._link_loss.setdefault(
+            key, (min(max(float(loss_rate), 0.0), 1.0), self.sim.now))
+        self.record("link-loss", key, "injected")
+
+    def node_faulted(self, node: int) -> bool:
+        return node in self._node_faults or node in self._silenced
+
+    def link_fault_pending(self, u: int, v: int) -> bool:
+        key = self._key(u, v)
+        return key in self._link_faults or key in self._link_loss
+
+    def faulted_nodes(self) -> List[int]:
+        """Nodes currently silent (injected fault or detected-dead but not
+        yet removed): no byte can originate from or transit them."""
+        return sorted(set(self._node_faults) | self._silenced)
+
+    def faulted_links(self) -> List[Tuple[int, int]]:
+        """Links currently blackholing data: hard faults plus total loss
+        (partial loss degrades goodput, it doesn't stop bytes)."""
+        return sorted(set(self._link_faults)
+                      | {k for k, (rate, _) in self._link_loss.items()
+                         if rate >= 1.0})
+
+    def pending_fault_deadline(self) -> Optional[float]:
+        """Latest virtual time by which every injected fault has either been
+        detected or is declared undetectable (lossy links that never tripped
+        the consecutive-failure threshold). Drives the engine's drain."""
+        dls = [t + self.heartbeat_timeout + 2 * self.heartbeat_period
+               for t in self._node_faults.values()]
+        dls += [t + (PROBE_FAILURES_FOR_LINK_DOWN + 1) * self.probe_period
+                for t in self._link_faults.values()]
+        dls += [t + LOSS_GIVEUP_SWEEPS * self.probe_period
+                for _, t in self._link_loss.values()]
+        return max(dls) if dls else None
+
+    def expire_faults(self, now: float) -> List[Tuple[str, Tuple, float]]:
+        """Drop injected faults whose detection deadline has passed; returns
+        [(fault kind, subject, fault_t)] for ledger bookkeeping."""
+        out: List[Tuple[str, Tuple, float]] = []
+        for n, t in sorted(self._node_faults.items()):
+            if now >= t + self.heartbeat_timeout + 2 * self.heartbeat_period:
+                out.append(("node-fault", (n,), t))
+                del self._node_faults[n]
+        for k, t in sorted(self._link_faults.items()):
+            if now >= t + (PROBE_FAILURES_FOR_LINK_DOWN + 1) * self.probe_period:
+                out.append(("link-fault", k, t))
+                del self._link_faults[k]
+        for k, (_, t) in sorted(self._link_loss.items()):
+            if now >= t + LOSS_GIVEUP_SWEEPS * self.probe_period:
+                out.append(("link-loss", k, t))
+                del self._link_loss[k]
+        return out
+
+    # -- periodic sweeps (daemon activities on the virtual clock) ---------------
+
+    def start_sweeps(self, *, seed: int = 0,
+                     heartbeat_period: Optional[float] = None,
+                     probe_period: Optional[float] = None):
+        """Schedule periodic heartbeat + probe sweeps as daemon events.
+
+        Daemon events never keep ``sim.run()`` alive on their own, so sweeps
+        can self-reschedule forever without hanging drains. Idempotent."""
+        if self.sweeps_on:
+            return
+        if heartbeat_period is not None:
+            self.heartbeat_period = float(heartbeat_period)
+        if probe_period is not None:
+            self.probe_period = float(probe_period)
+        self.sweeps_on = True
+        self._probe_rng = random.Random(seed)
+        for n in self._live_nodes():
+            self.last_heartbeat[n] = self.sim.now
+        self.sim.at(self.sim.now + self.heartbeat_period,
+                    self._heartbeat_sweep, daemon=True)
+        self.sim.at(self.sim.now + self.probe_period,
+                    self._probe_sweep, daemon=True)
+
+    def stop_sweeps(self):
+        self.sweeps_on = False
+
+    def _live_nodes(self) -> List[int]:
+        return sorted(n for n, i in self.topo.nodes.items()
+                      if i.state in ("active", "standby"))
+
+    def _heartbeat_sweep(self):
+        if not self.sweeps_on:
+            return
+        for n in self._live_nodes():
+            if not self.node_faulted(n):
+                self.heartbeat(n)  # healthy nodes keep beating
+        self.check_heartbeats()
+        self.sim.at(self.sim.now + self.heartbeat_period,
+                    self._heartbeat_sweep, daemon=True)
+
+    def _probe_sweep(self):
+        if not self.sweeps_on:
+            return
+        for u, v in self._probe_targets():
+            self.probe_link(u, v, ok=self._probe_ok(u, v))
+        self.sim.at(self.sim.now + self.probe_period,
+                    self._probe_sweep, daemon=True)
+
+    def _probe_targets(self) -> List[Tuple[int, int]]:
+        """Links probed this sweep: both endpoints live and not silent — a
+        probe that dies because its *endpoint* is dead is the heartbeat
+        path's failure to detect, not the link's."""
+        live = {n for n in self._live_nodes() if not self.node_faulted(n)}
+        return sorted(self._key(u, v) for u, v in self.topo.g.edges
+                      if u in live and v in live)
+
+    def _probe_ok(self, u: int, v: int) -> bool:
+        key = self._key(u, v)
+        if key in self._link_faults:
+            return False
+        loss = self._link_loss.get(key)
+        if loss is not None:
+            return self._probe_rng.random() >= loss[0]
+        return True
 
     # -- heartbeats ------------------------------------------------------------
 
@@ -72,31 +285,54 @@ class ClusterMonitor:
         self.last_heartbeat[node_id] = self.sim.now
 
     def check_heartbeats(self) -> List[int]:
-        """Returns nodes whose heartbeats have lapsed; triggers callbacks."""
+        """Returns nodes whose heartbeats have lapsed; triggers callbacks.
+
+        Each lapsed node is reported exactly once: its heartbeat-table entry
+        is dropped on detection (and stale entries of departed nodes are
+        garbage-collected), so repeated sweeps don't re-report the same dead
+        node."""
         dead = []
-        for n, t in list(self.last_heartbeat.items()):
+        # pop (not del): a detection callback earlier in this very loop can
+        # remove other nodes from the table (e.g. aborting an in-flight join
+        # whose only source died), invalidating the snapshot being iterated.
+        for n, t in sorted(self.last_heartbeat.items()):
             info = self.topo.nodes.get(n)
-            if info is None or info.state != "active":
+            if info is None or info.state in ("failed", "left"):
+                self.last_heartbeat.pop(n, None)
                 continue
-            if self.sim.now - t > HEARTBEAT_TIMEOUT_S:
+            if info.state not in ("active", "standby"):
+                continue
+            if self.sim.now - t > self.heartbeat_timeout:
                 dead.append(n)
+                self.last_heartbeat.pop(n, None)
+                self._silenced.add(n)
+                fault_t = self._node_faults.pop(n, None)
                 self.record("node-failure", n, "heartbeat timeout")
-                if self.on_node_failure:
+                if self.on_node_detected is not None:
+                    self.on_node_detected(n, fault_t, self.sim.now)
+                elif self.on_node_failure:
                     self.on_node_failure(n)
         return dead
 
     # -- link probes -------------------------------------------------------------
 
     def probe_link(self, u: int, v: int, ok: bool = True):
-        key = (min(u, v), max(u, v))
+        key = self._key(u, v)
         if ok:
             self._probe_failures.pop(key, None)
             return False
         c = self._probe_failures.get(key, 0) + 1
         self._probe_failures[key] = c
         if c >= PROBE_FAILURES_FOR_LINK_DOWN:
+            self._probe_failures.pop(key, None)
+            fault_t = self._link_faults.pop(key, None)
+            loss = self._link_loss.pop(key, None)
+            if fault_t is None and loss is not None:
+                fault_t = loss[1]
             self.record("link-failure", key)
-            if self.on_link_failure:
+            if self.on_link_detected is not None:
+                self.on_link_detected(key[0], key[1], fault_t, self.sim.now)
+            elif self.on_link_failure:
                 self.on_link_failure(u, v)
             return True
         return False

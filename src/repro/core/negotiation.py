@@ -56,6 +56,10 @@ class PrimitiveResult:
     delay_s: float  # blocking (non-overlapped) portion — Table I semantics
     wall_s: float  # full protocol wall time incl. hidden parts
     timeline: Dict[str, float]
+    #: monitor detection latency (fault injection → sweep detection) when the
+    #: primitive was triggered by the cluster monitor rather than an
+    #: omniscient trace event; None for injected/graceful churn.
+    detection_s: Optional[float] = None
 
 
 @dataclass
@@ -253,7 +257,8 @@ class ChaosScheduler:
             start = t_start + sync.get(u, 0.0)
 
             def launch(route=route, nbytes=nbytes, handle=handle):
-                if handle.cancelled:  # invalidated before the bytes moved
+                # Invalidated (or silently stalled) before the bytes moved.
+                if handle.cancelled or handle.stalled:
                     return
                 self.net.transfer(route, nbytes, lambda t: None, handle=handle)
 
@@ -364,9 +369,19 @@ class ChaosScheduler:
 
     # -- scale-in (Fig 4b) -------------------------------------------------------
 
-    def scale_in(self, node: int, failure: bool = False) -> PrimitiveResult:
+    def scale_in(self, node: int, failure: bool = False,
+                 fault_t: Optional[float] = None) -> PrimitiveResult:
         t0 = self.sim.now
         timeline = {"request": t0}
+        detection_s = None
+        if fault_t is not None:
+            # Monitor-detected failure: the node went silent at ``fault_t``
+            # and the heartbeat sweep noticed now — the detection latency is
+            # part of the end-to-end failure-to-recovery time even though
+            # the handling below stays sub-ms.
+            timeline["fault"] = fault_t
+            timeline["detected"] = t0
+            detection_s = t0 - fault_t
         # Control exchange (leave request / failure detection) is overlapped
         # with training; the blocking part is socket teardown + policy swap.
         wall = self._control_rtt(self.node, node) if not failure else 0.0
@@ -378,13 +393,15 @@ class ChaosScheduler:
             # charged to the training loop, not the primitive).
             timeline["allreduce_restart"] = t0 + blocking
         timeline["done"] = t0 + blocking
-        return PrimitiveResult(blocking, wall + blocking, timeline)
+        return PrimitiveResult(blocking, wall + blocking, timeline,
+                               detection_s=detection_s)
 
     # -- connect-link (Fig 4c / 5b) -----------------------------------------------
 
     def connect_link(self, u: int, v: int, link: Link) -> PrimitiveResult:
         t0 = self.sim.now
         self.topo.add_link(u, v, link)
+        self.monitor.reset_link(u, v)  # fresh link, fresh probe counters
         # Socket setup + measurement overlap with all-reduce + gradient
         # compute (§IV-C Fig 5b) — fully hidden; blocking part = policy swap.
         wall = self._control_rtt(self.node, u) + SOCKET_SETUP_S + MEASURE_SECONDS
@@ -395,14 +412,22 @@ class ChaosScheduler:
 
     # -- disconnect-link (Fig 4d) ----------------------------------------------------
 
-    def disconnect_link(self, u: int, v: int, failure: bool = False) -> PrimitiveResult:
+    def disconnect_link(self, u: int, v: int, failure: bool = False,
+                        fault_t: Optional[float] = None) -> PrimitiveResult:
         t0 = self.sim.now
         self.topo.remove_link(u, v)
+        self.monitor.reset_link(u, v)  # gone link, no lingering probe state
         wall = 0.0 if failure else self._control_rtt(self.node, u)
         blocking = SOCKET_SETUP_S + self._update_sync_policy()
         self.monitor.record("link-failure" if failure else "link-leave", (u, v))
-        return PrimitiveResult(blocking, wall + blocking, {"request": t0,
-                                                           "done": t0 + blocking})
+        timeline = {"request": t0, "done": t0 + blocking}
+        detection_s = None
+        if fault_t is not None:
+            timeline["fault"] = fault_t
+            timeline["detected"] = t0
+            detection_s = t0 - fault_t
+        return PrimitiveResult(blocking, wall + blocking, timeline,
+                               detection_s=detection_s)
 
 
 # ---------------------------------------------------------------------------

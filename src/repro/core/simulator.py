@@ -24,25 +24,41 @@ CONTROL_MSG_BYTES = 1024.0  # small JSON-ish control messages
 
 
 class Sim:
-    """Minimal event kernel."""
+    """Minimal event kernel with daemon (periodic-activity) events.
+
+    A *daemon* event — like the cluster monitor's self-rescheduling heartbeat
+    and probe sweeps — runs whenever the clock passes its time but never keeps
+    the simulation alive on its own: ``run()`` without ``until`` stops once
+    only daemon events remain, exactly like daemon threads not blocking
+    process exit. Without this, a periodic sweep would make every
+    drain-the-world ``run()`` loop forever.
+    """
 
     def __init__(self):
         self.now = 0.0
         self._heap: list = []
         self._seq = itertools.count()
+        self._live = 0  # scheduled non-daemon events not yet executed
 
-    def at(self, t: float, fn: Callable[[], None]):
-        heapq.heappush(self._heap, (max(t, self.now), next(self._seq), fn))
+    def at(self, t: float, fn: Callable[[], None], daemon: bool = False):
+        if not daemon:
+            self._live += 1
+        heapq.heappush(self._heap, (max(t, self.now), next(self._seq), fn,
+                                    daemon))
 
-    def after(self, dt: float, fn: Callable[[], None]):
-        self.at(self.now + dt, fn)
+    def after(self, dt: float, fn: Callable[[], None], daemon: bool = False):
+        self.at(self.now + dt, fn, daemon=daemon)
 
     def run(self, until: Optional[float] = None):
         while self._heap:
-            t, _, fn = self._heap[0]
+            t, _, fn, daemon = self._heap[0]
+            if until is None and self._live == 0:
+                break  # only daemons left: nothing real to wait for
             if until is not None and t > until:
                 break
             heapq.heappop(self._heap)
+            if not daemon:
+                self._live -= 1
             self.now = t
             fn()
         if until is not None:
@@ -66,7 +82,7 @@ class TransferHandle:
     sub-restart self-healing (paper §IV-C taken to byte granularity)."""
 
     __slots__ = ("cancelled", "done_t", "nbytes", "t_first_byte",
-                 "byte_rate", "cancelled_delivered")
+                 "byte_rate", "cancelled_delivered", "stalled_t")
 
     def __init__(self):
         self.cancelled = False
@@ -75,10 +91,15 @@ class TransferHandle:
         self.t_first_byte: Optional[float] = None  # first byte at destination
         self.byte_rate = 0.0  # destination drain rate (bytes/s, final hop)
         self.cancelled_delivered = 0.0  # bytes landed when cancel() fired
+        self.stalled_t: Optional[float] = None  # silent fault froze the stream
 
     @property
     def done(self) -> bool:
         return self.done_t is not None
+
+    @property
+    def stalled(self) -> bool:
+        return self.stalled_t is not None
 
     def progress(self, now: float) -> float:
         """Bytes delivered to the destination by virtual time ``now``."""
@@ -86,8 +107,19 @@ class TransferHandle:
             return float(self.nbytes)
         if self.t_first_byte is None:  # cancelled before the bytes moved
             return 0.0
+        if self.stalled_t is not None:  # no byte moved after the silent fault
+            now = min(now, self.stalled_t)
         return float(min(self.nbytes,
                          max(0.0, (now - self.t_first_byte) * self.byte_rate)))
+
+    def stall(self, now: float):
+        """A silent fault (dead source node, blackholed link) froze the
+        stream: delivery never completes and progress stops accruing at
+        ``now`` — but the stream stays *pending* (not cancelled) because
+        nobody has detected the fault yet. The eventual detection-triggered
+        re-plan cancels it and credits the pre-stall prefix."""
+        if not self.done and not self.cancelled and self.stalled_t is None:
+            self.stalled_t = now
 
     def cancel(self, now: Optional[float] = None):
         """Cancel the stream; with ``now`` given, snapshot delivery progress
@@ -148,7 +180,7 @@ class Network:
             handle.byte_rate = float("inf")
 
         def deliver():
-            if handle.cancelled:
+            if handle.cancelled or handle.stalled:
                 return
             handle.done_t = t
             on_done(t)

@@ -122,7 +122,8 @@ class ElasticTrainer:
     def apply_link_event(self, kind: str, device_ids: Sequence[int],
                          bandwidth_mbps: Optional[float] = None,
                          latency_s: Optional[float] = None,
-                         link: Optional[Sequence[int]] = None):
+                         link: Optional[Sequence[int]] = None,
+                         loss_rate: Optional[float] = None):
         """Map a trace link event onto the per-device link model.
 
         Host-simulated devices share one interconnect, so a trace link
@@ -159,9 +160,21 @@ class ElasticTrainer:
                 ovs[key] = NeighborLink(
                     latency_s if latency_s is not None else cur.prop_s,
                     trans, cur.sync_s)
-            elif kind in ("link-leave", "link-failure"):
+            elif kind in ("link-leave", "link-failure", "link-fault"):
                 ovs[key] = NeighborLink(
                     base.prop_s, SEVERED_TRANS_S_PER_BYTE, base.sync_s)
+            elif kind == "link-loss":
+                # Lossy link: retransmissions inflate the effective per-byte
+                # time by 1/(1-loss) — the goodput model. A missing rate
+                # means total loss (matching SimBackend); clamped just below
+                # 1.0 so the divisor stays finite — fully severing is
+                # link-fault's job.
+                rate = 1.0 if loss_rate is None else float(loss_rate)
+                rate = min(max(rate, 0.0), 0.99)
+                cur = ovs.get(key, base)
+                ovs[key] = NeighborLink(
+                    cur.prop_s, cur.trans_s_per_byte / (1.0 - rate),
+                    cur.sync_s)
             else:
                 raise ValueError(f"not a link event kind: {kind!r}")
 
@@ -298,6 +311,14 @@ class TrainerBackend:
     :meth:`ElasticTrainer.apply_link_event`, so degraded or severed links
     change the plan shapes of later joins; events whose endpoints resolve to
     no device stay ``noop-link`` for trace parity.
+
+    Fault kinds route like their detected outcomes: there is no virtual
+    clock to sweep on, so the trainer's monitor stand-in "detects" at the
+    next event boundary — ``node-fault`` scales the device in as a failure,
+    ``link-fault`` severs the per-device link, ``link-loss`` inflates the
+    link's effective per-byte time by the goodput factor. Ledger records
+    keep the fault kind and mark ``detected`` so detected-mode traces stay
+    diffable across substrates.
     """
 
     def __init__(self, trainer: ElasticTrainer, *, batch_fn=None,
@@ -309,6 +330,7 @@ class TrainerBackend:
         self.results: Dict[int, object] = {}
         self._node_device: Dict[int, object] = {}  # trace node id -> device
         self._departed: set = set()  # trace nodes that already left/failed
+        self._link_faulted: set = set()  # trace links with an applied fault
 
     # -- engine protocol -----------------------------------------------------
 
@@ -341,8 +363,9 @@ class TrainerBackend:
                 "shard_size": sev.plan_summary["shard_size"],
             })
             return
-        if ev.kind in ("leave", "node-failure"):
-            failure = ev.kind == "node-failure"
+        if ev.kind in ("leave", "node-failure", "node-fault"):
+            failure = ev.kind in ("node-failure", "node-fault")
+            detected = ev.kind == "node-fault"
             if ev.node in self._departed:  # duplicate departure in the trace
                 ledger.append(seq, ev.t, ev.kind, ev.node, "skipped-not-active")
                 return
@@ -365,10 +388,12 @@ class TrainerBackend:
             self._node_device[ev.node] = device
             self._departed.add(ev.node)
             self.results[seq] = sev
+            detail = {"device": device.id, "step": sev.step,
+                      "n_active": len(tr.active)}
+            if detected:
+                detail["detected"] = True
             ledger.append(seq, ev.t, ev.kind, ev.node,
-                          "node-failed" if failure else "scaled-in",
-                          {"device": device.id, "step": sev.step,
-                           "n_active": len(tr.active)})
+                          "node-failed" if failure else "scaled-in", detail)
             return
         # Link events: project the trace link onto its endpoint devices'
         # per-device link model. Unresolvable endpoints keep the historical
@@ -379,13 +404,30 @@ class TrainerBackend:
         if not dev_ids:
             ledger.append(seq, ev.t, ev.kind, (ev.u, ev.v), "noop-link")
             return
+        link_key = (min(ev.u, ev.v), max(ev.u, ev.v))
+        if ev.kind in ("link-fault", "link-loss"):
+            # Mirror SimBackend's duplicate-fault dedup: re-applying a loss
+            # factor would compound 1/(1-loss) and diverge the substrates.
+            if link_key in self._link_faulted:
+                ledger.append(seq, ev.t, ev.kind, (ev.u, ev.v),
+                              "skipped-duplicate-fault")
+                return
+            self._link_faulted.add(link_key)
+        elif ev.kind == "link-join":
+            self._link_faulted.discard(link_key)
         tr.apply_link_event(ev.kind, dev_ids, bandwidth_mbps=ev.bandwidth_mbps,
-                            latency_s=ev.latency_s, link=(ev.u, ev.v))
+                            latency_s=ev.latency_s, link=(ev.u, ev.v),
+                            loss_rate=ev.loss_rate)
         action = {"link-join": "link-restored",
-                  "link-degrade": "link-degraded"}.get(ev.kind, "link-severed")
+                  "link-degrade": "link-degraded",
+                  "link-loss": "link-lossy"}.get(ev.kind, "link-severed")
         detail = {"devices": dev_ids}
         if ev.bandwidth_mbps is not None:
             detail["bandwidth_mbps"] = ev.bandwidth_mbps
+        if ev.loss_rate is not None:
+            detail["loss_rate"] = ev.loss_rate
+        if ev.kind in ("link-fault", "link-loss"):
+            detail["detected"] = True
         ledger.append(seq, ev.t, ev.kind, (ev.u, ev.v), action, detail)
 
     def _device_for(self, node):

@@ -9,6 +9,7 @@ from repro.scenarios.generators import (
     link_flaps,
     poisson_churn,
     regional_partition,
+    silent_failures,
 )
 
 __all__ = [
@@ -21,4 +22,5 @@ __all__ = [
     "link_flaps",
     "adversarial_churn",
     "bandwidth_degradation",
+    "silent_failures",
 ]

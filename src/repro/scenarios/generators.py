@@ -23,6 +23,10 @@ Catalog:
   fastest link collapses to a fraction of its bandwidth while the shard
   streams are in flight (``link-degrade`` events), forcing credit-aware
   reshuffles; optionally the rate restores later.
+* ``silent_failures``    — *fault* injection (``node-fault`` / ``link-fault``
+  / ``link-loss``): subjects go bad without any churn event, so the cluster
+  monitor's heartbeat/probe sweeps must detect them — the trace that turns
+  handling-only benchmarks into detection + handling end-to-end numbers.
 """
 from __future__ import annotations
 
@@ -350,6 +354,64 @@ def bandwidth_degradation(
                          })
 
 
+def silent_failures(
+    topo: Topology, *, seed: int, horizon_s: float,
+    n_node_faults: int = 2, n_link_faults: int = 2, n_lossy_links: int = 1,
+    loss_rate: float = 0.6, n_joins: int = 1, max_links: int = 3,
+    bw_range=DEFAULT_BW_RANGE, lat_range=DEFAULT_LAT_RANGE,
+    compute_range=DEFAULT_COMPUTE_RANGE,
+) -> ScenarioTrace:
+    """Silent faults the monitor must *detect* — no omniscient churn events.
+
+    ``n_node_faults`` nodes go silent (stop heartbeating) and
+    ``n_link_faults`` links start blackholing probes at seeded times within
+    the horizon; ``n_lossy_links`` more drop probes with probability
+    ``loss_rate`` (which may or may not trip the consecutive-failure
+    threshold — lossy links are the false-negative/false-positive study).
+    Optional ``n_joins`` interleave scale-outs so some faults land
+    mid-replication, exercising detection-triggered re-plans. Faulted
+    subjects are disjoint (no link fault incident to a silent node): a
+    probe that dies with its endpoint is the heartbeat path's detection,
+    not the link's.
+    """
+    rng = random.Random(seed)
+    nodes = sorted(topo.active_nodes())
+    protected = min(nodes) if nodes else None  # scheduler node
+    events: List[ChurnEvent] = []
+    pool = [n for n in nodes if n != protected]
+    victims = rng.sample(pool, min(n_node_faults, max(len(pool) - 1, 0)))
+    for n in sorted(victims):
+        events.append(ChurnEvent(t=rng.uniform(0, horizon_s),
+                                 kind="node-fault", node=n))
+    victim_set = set(victims)
+    edges = [(min(u, v), max(u, v)) for u, v in sorted(topo.g.edges)
+             if not ({u, v} & victim_set)]
+    rng.shuffle(edges)
+    k = min(n_link_faults, len(edges))
+    for u, v in edges[:k]:
+        events.append(ChurnEvent(t=rng.uniform(0, horizon_s),
+                                 kind="link-fault", u=u, v=v))
+    for u, v in edges[k:k + n_lossy_links]:
+        events.append(ChurnEvent(t=rng.uniform(0, horizon_s),
+                                 kind="link-loss", u=u, v=v,
+                                 loss_rate=loss_rate))
+    m = _Membership(nodes, rng)
+    for _ in range(n_joins):
+        events.append(_join_event(rng.uniform(0, horizon_s), m, rng,
+                                  max_links=max_links, min_links=2,
+                                  bw_range=bw_range, lat_range=lat_range,
+                                  compute_range=compute_range))
+    return ScenarioTrace("silent-failures", seed,
+                         sorted(events, key=lambda e: e.t), {
+                             "n_node_faults": len(victims),
+                             "n_link_faults": k,
+                             "n_lossy_links": min(n_lossy_links,
+                                                  max(len(edges) - k, 0)),
+                             "loss_rate": loss_rate, "n_joins": n_joins,
+                             "horizon_s": horizon_s,
+                         })
+
+
 GENERATORS = {
     "poisson-churn": poisson_churn,
     "diurnal-waves": diurnal_waves,
@@ -358,4 +420,5 @@ GENERATORS = {
     "link-flaps": link_flaps,
     "adversarial-churn": adversarial_churn,
     "bandwidth-degradation": bandwidth_degradation,
+    "silent-failures": silent_failures,
 }
