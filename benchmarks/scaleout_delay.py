@@ -15,8 +15,12 @@ same mid-replication source failure once as a trace-injected
 ``node-failure`` (the engine reacts instantly — the pre-detection
 semantics) and once as a silent ``node-fault`` the cluster monitor's
 heartbeat sweeps must notice, reporting per-event ``detection_s`` and
-``handling_s`` separately. Combine with ``--smoke`` for the CI check
-(includes a same-seed byte-identical-ledger assertion with sweeps active).
+``handling_s`` separately. It also A/Bs the *detector itself*: the same
+silent death under the fixed-timeout baseline vs the adaptive phi-accrual
+suspicion detector, quiet and under elevated churn — adaptive detection
+must be faster under churn and no worse when quiet. Combine with
+``--smoke`` for the CI check (includes a same-seed byte-identical-ledger
+assertion with sweeps active and probes riding the simulated network).
 """
 from __future__ import annotations
 
@@ -27,6 +31,7 @@ import numpy as np
 from benchmarks.common import (
     CV_MODELS,
     MiB,
+    measure_detection_latency,
     measure_failure_recovery,
     measure_midstream_link_failure,
     measure_scale_out,
@@ -126,6 +131,40 @@ def run_detected(smoke: bool = False, repeats: int = 3):
     return rows, event_rows
 
 
+def run_detector_ab(smoke: bool = False, repeats: int = 3):
+    """Fixed-timeout vs adaptive phi-accrual fault-to-detection A/B.
+
+    The same silent node death is detected under both suspicion models, in
+    a quiet cluster and under elevated churn (replication traffic on the
+    wire + a lossy link keeping the adaptive sweeps tightened). The claim
+    being checked: adaptive phi-accrual detects *faster under churn* —
+    tightened sweep grids plus an arrival-history threshold that crosses
+    before a worst-case fixed timeout — and is *no worse when quiet*."""
+    repeats = 1 if smoke else repeats
+    state = 16 * MiB if smoke else 64 * MiB
+    sizes = tensor_sizes_for(state, 1 * MiB if smoke else 2 * MiB)
+    rows = []
+    for regime, congested in (("quiet", False), ("churn", True)):
+        for detector in ("fixed", "phi"):
+            ds = [measure_detection_latency(8, state, sizes, seed=r,
+                                            detector=detector,
+                                            congested=congested)["detection_s"]
+                  for r in range(repeats)]
+            rows.append({
+                "regime": regime, "detector": detector,
+                "detection_s": round(float(np.mean(ds)), 4),
+                "detection_std": round(float(np.std(ds)), 4),
+            })
+    save("detection_latency_ab", rows)
+    return rows
+
+
+def _detector_ab_ok(rows) -> bool:
+    d = {(r["regime"], r["detector"]): r["detection_s"] for r in rows}
+    return (d[("churn", "phi")] < d[("churn", "fixed")]
+            and d[("quiet", "phi")] <= d[("quiet", "fixed")] + 1e-9)
+
+
 def _detected_smoke() -> int:
     rows, event_rows = run_detected(smoke=True)
     print_csv("Scale-out under failure: omniscient vs detected", rows,
@@ -137,20 +176,28 @@ def _detected_smoke() -> int:
     omni = [r for r in rows if r["mode"] == "omniscient"]
     det = [r for r in rows if r["mode"] == "detected"]
     det_events = [e for e in event_rows if e["mode"] == "detected"]
+    ab_rows = run_detector_ab(smoke=True)
+    print_csv("Detection latency: fixed-timeout vs adaptive phi-accrual",
+              ab_rows, ["regime", "detector", "detection_s", "detection_std"])
     # Detected-mode ledgers must carry fault_t/detected_t, and the same
-    # seed must be byte-identical with monitor sweeps active.
+    # seed must be byte-identical with monitor sweeps active (probes and
+    # heartbeats riding the simulated network included).
     sizes = tensor_sizes_for(16 * MiB, 1 * MiB)
     d1 = measure_failure_recovery(8, 16 * MiB, sizes, seed=0, detected=True)
     d2 = measure_failure_recovery(8, 16 * MiB, sizes, seed=0, detected=True)
     identical = (d1["ledger"].canonical_bytes()
                  == d2["ledger"].canonical_bytes())
+    ab_ok = _detector_ab_ok(ab_rows)
     ok = (all(r["detection_s"] == 0.0 for r in omni)
           and all(r["detection_s"] > 0 for r in det)
           and all(e["fault_t"] != "" and e["detected_t"] != ""
                   for e in det_events)
           and all(r["handling_s"] < r["detection_s"] for r in det)
-          and identical)
+          and identical
+          and ab_ok)
     print(f"derived: same_seed_detected_ledgers_identical={identical}")
+    print(f"derived: phi_adaptive_beats_fixed_under_churn_no_worse_quiet="
+          f"{ab_ok}")
     print("SMOKE_OK" if ok else "SMOKE_FAILED")
     return 0 if ok else 1
 
@@ -167,6 +214,10 @@ def main():
         print_csv("Per-event detection/handling breakdown", event_rows,
                   ["model", "mode", "kind", "subject", "fault_t",
                    "detected_t", "detection_s", "handling_s"])
+        ab_rows = run_detector_ab()
+        print_csv("Detection latency: fixed-timeout vs adaptive phi-accrual",
+                  ab_rows, ["regime", "detector", "detection_s",
+                            "detection_std"])
         return 0
     if "--churn" in sys.argv[1:]:
         rows = run_churn()

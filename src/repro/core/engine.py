@@ -216,7 +216,8 @@ class SimBackend:
 
     def __init__(self, cluster: SimCluster, *, min_active: int = 2,
                  solver_charge_s=DEFAULT_SOLVER_CHARGE_S,
-                 partial_credit: bool = True, detection_seed: int = 0):
+                 partial_credit: bool = True, detection_seed: int = 0,
+                 detector: str = "phi"):
         self.cluster = cluster
         self.min_active = min_active
         self.inflight: List[InflightScaleOut] = []
@@ -228,8 +229,10 @@ class SimBackend:
         # Detection wiring: the monitor's sweeps report detected failures
         # here so they re-enter the pipeline as synthesized churn events.
         # Sweeps stay off until the first fault event, so omniscient traces
-        # replay exactly as before.
+        # replay exactly as before. ``detector`` picks the suspicion model
+        # ("phi" adaptive phi-accrual, "fixed" timeout baseline).
         self.detection_seed = int(detection_seed)
+        self.detector = str(detector)
         self._fault_seq: Dict[Tuple, int] = {}  # fault subject -> trace seq
         self._detection: Optional[dict] = None  # fault_t/detected_t context
         self._ledger: Optional[EventLedger] = None
@@ -268,17 +271,26 @@ class SimBackend:
         daemon events (they never keep ``sim.run()`` alive), so after real
         work drains we keep advancing the clock until every injected fault
         has been detected — or deterministically given up on (a lossy link
-        that never tripped the consecutive-failure threshold)."""
+        that never tripped the consecutive-failure threshold).
+
+        The advance is *suspicion-aware*: the monitor owns each fault's
+        give-up deadline (set at injection, sized for fully backed-off
+        adaptive sweeps) and exposes the earliest one as
+        ``detection_horizon()``. The drain steps the clock toward that
+        horizon one worst-case sweep period at a time, so detections —
+        and the replication re-plans they trigger — land at their natural
+        virtual times instead of after one big jump."""
         self._ledger = ledger
         sim = self.cluster.sim
         mon = self.sched.monitor
         while True:
             sim.run()
             self._pump(ledger)
-            deadline = mon.pending_fault_deadline()
-            if deadline is None:
+            horizon = mon.detection_horizon()
+            if horizon is None:
                 break
-            sim.run(until=max(deadline, sim.now))
+            step_to = min(max(horizon, sim.now), sim.now + mon.drain_step_s())
+            sim.run(until=max(step_to, sim.now + 1e-9))
             self._pump(ledger)
             for kind, subject, fault_t in mon.expire_faults(sim.now):
                 key = (("node", subject[0]) if kind == "node-fault"
@@ -417,6 +429,30 @@ class SimBackend:
             ledger.append(seq, ev.t, ev.kind, (u, v), "skipped-unknown-node")
             return
         if self.topo.has_link(u, v):
+            if self.sched.monitor.link_fault_pending(u, v):
+                # A silent fault never removed the link from the topology,
+                # so this link-join is a *restoration* racing detection
+                # (e.g. a detector_stress flap whose restore wins): clear
+                # the pending fault — reset_link reports it through
+                # on_fault_cleared, closing the fault's ledger trail with a
+                # terminal fault-cleared record — refresh the link's
+                # parameters, and re-plan the streams the fault stalled
+                # (their connections died with the blackhole; the bytes
+                # already delivered stay credited).
+                link = self.topo.link(u, v)
+                if ev.bandwidth_mbps is not None:
+                    link.bandwidth_mbps = max(float(ev.bandwidth_mbps),
+                                              MIN_LINK_MBPS)
+                if ev.latency_s is not None:
+                    link.latency_s = float(ev.latency_s)
+                self.topo.touch()
+                self.sched.monitor.reset_link(u, v)
+                ledger.append(seq, ev.t, ev.kind, (u, v), "link-restored", {
+                    "bandwidth_mbps": link.bandwidth_mbps,
+                    "latency_s": link.latency_s,
+                })
+                self._replan_touched(ledger, link=(u, v))
+                return
             ledger.append(seq, ev.t, ev.kind, (u, v), "skipped-link-exists")
             return
         # `is None` (not truthiness): an explicit 0.0 latency is a real
@@ -463,6 +499,7 @@ class SimBackend:
             link.bandwidth_mbps = max(float(ev.bandwidth_mbps), MIN_LINK_MBPS)
         if ev.latency_s is not None:
             link.latency_s = float(ev.latency_s)
+        self.topo.touch()  # in-place Link mutation: route caches are stale
         self.sched.monitor.record("link-degrade", (u, v))
         ledger.append(seq, ev.t, ev.kind, (u, v), "link-degraded", {
             "bandwidth_mbps": link.bandwidth_mbps,
@@ -478,7 +515,8 @@ class SimBackend:
     # the corresponding node-failure / link-failure back into this backend.
 
     def _start_sweeps(self):
-        self.sched.monitor.start_sweeps(seed=self.detection_seed)
+        self.sched.monitor.start_sweeps(seed=self.detection_seed,
+                                        detector=self.detector)
 
     @staticmethod
     def _route_uses_link(route, key) -> bool:
@@ -571,8 +609,12 @@ class SimBackend:
         if loss >= 1.0:
             # Total loss blackholes the data plane exactly like link-fault:
             # in-flight shard bytes stop at the fault instant, not at
-            # detection. (Partial loss degrades goodput — probes-only for
-            # now; see the ROADMAP detection-refinement item.)
+            # detection. Partial loss inflates the link's data-plane
+            # per-byte time by the 1/(1-loss) goodput factor for transfers
+            # scheduled from now on (``Network.set_link_loss``, applied by
+            # the monitor's injection) — the same model the trainer backend
+            # uses — while probes ride the lossy link and may or may not
+            # trip the consecutive-failure threshold.
             self._stall_touched(link=(u, v))
         self._fault_seq[("link", (u, v))] = seq
         ledger.append(seq, ev.t, ev.kind, (u, v), "fault-injected",
@@ -596,6 +638,13 @@ class SimBackend:
         seq = self._fault_seq.pop(("node", node), -1)
         ev = ChurnEvent(t=detected_t, kind="node-failure", node=node)
         self._detection = self._detection_detail(fault_t, detected_t)
+        mon = self.sched.monitor
+        if mon.last_suspicion is not None:
+            # The phi score that crossed the threshold, alongside the
+            # threshold it crossed — the ledger's record of *why* the
+            # detector fired, not just when.
+            self._detection["suspicion"] = round(mon.last_suspicion, 4)
+            self._detection["phi_threshold"] = mon.phi_threshold
         try:
             self._on_leave(seq, ev, self._ledger)
         finally:
@@ -632,11 +681,13 @@ def run_trace_sim(cluster: SimCluster, events: Iterable[ChurnEvent],
                   *, min_active: int = 2,
                   solver_charge_s=SimBackend.DEFAULT_SOLVER_CHARGE_S,
                   partial_credit: bool = True, detection_seed: int = 0,
+                  detector: str = "phi",
                   ) -> Tuple[EventLedger, Dict[int, object]]:
     """Replay a churn trace through the engine on a simulated cluster."""
     engine = ChurnEngine(SimBackend(cluster, min_active=min_active,
                                     solver_charge_s=solver_charge_s,
                                     partial_credit=partial_credit,
-                                    detection_seed=detection_seed))
+                                    detection_seed=detection_seed,
+                                    detector=detector))
     ledger = engine.run(events)
     return ledger, engine.results

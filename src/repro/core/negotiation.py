@@ -146,6 +146,7 @@ class ChaosScheduler:
         self.node = scheduler_node
         self.strategy = strategy
         self.monitor = ClusterMonitor(sim, net, topo)
+        self.monitor.home = scheduler_node  # heartbeats route to the scheduler
         self.monitor.on_node_failure = lambda n: self.scale_in(n, failure=True)
         self.monitor.on_link_failure = lambda u, v: self.disconnect_link(u, v, failure=True)
         self.sync_policy_version = 0
@@ -354,7 +355,14 @@ class ChaosScheduler:
         if self.strategy in ("chaos", "chaos-even"):
             for u in plan.sources:
                 nbytes = plan.sources[u]
-                l = self.topo.link(u, plan.routes[u][1]) if len(plan.routes[u]) > 1 else None
+                # The plan's route may reference a link that churned away
+                # after the stream completed (no replan touches a finished
+                # stream): idle attribution then falls back to zero serve
+                # time rather than dereferencing a dead edge.
+                route = plan.routes[u]
+                l = (self.topo.link(u, route[1])
+                     if len(route) > 1 and self.topo.has_link(u, route[1])
+                     else None)
                 serve = nbytes * l.trans_delay_per_byte if l else 0.0
                 # Serving overlaps with compute; idle is the non-hidden tail.
                 hide = self.topo.nodes[u].compute_s

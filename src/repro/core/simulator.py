@@ -21,6 +21,12 @@ from typing import Callable, Dict, List, Optional, Tuple
 from repro.core.topology import Link, Topology
 
 CONTROL_MSG_BYTES = 1024.0  # small JSON-ish control messages
+#: worst-case queueing a tiny control datagram (heartbeat / probe) suffers
+#: behind bulk traffic on a link. Small packets interleave with a bulk
+#: stream's packets instead of waiting for the whole transfer, but deep
+#: buffers still delay them — this caps that delay, so congestion shows up
+#: in control-plane latencies without starving them for a whole transfer.
+CONTROL_QUEUE_CAP_S = 0.05
 
 
 class Sim:
@@ -130,32 +136,81 @@ class TransferHandle:
 
 
 class Network:
-    """Store-and-forward transfers with per-link FIFO occupancy."""
+    """Store-and-forward transfers with per-link FIFO occupancy.
+
+    Two refinements serve the detection layer:
+
+    * **Per-link loss goodput** — :meth:`set_link_loss` records a partial
+      packet-loss rate on a link; every transfer scheduled afterwards pays
+      a ``1/(1-loss)`` inflation of that hop's per-byte time (the
+      retransmission goodput model — the same factor the trainer backend
+      applies). Streams already on the wire keep their schedule: their
+      packets were sent at the pre-loss rate. Total loss (``rate >= 1``)
+      is a blackhole and is modelled by stalling streams, not here.
+    * **Non-contending control datagrams** — ``transfer(contend=False)``
+      sends a tiny packet (heartbeat, probe) that interleaves with bulk
+      traffic instead of queueing behind whole transfers: it never
+      reserves link occupancy and waits at most ``CONTROL_QUEUE_CAP_S``
+      behind the current backlog, so congestion delays the control plane
+      organically without starving it for a replication's duration.
+    """
 
     def __init__(self, sim: Sim, topo: Topology):
         self.sim = sim
         self.topo = topo
         self._link_free: Dict[Tuple[int, int], float] = {}
+        self._link_loss: Dict[Tuple[int, int], float] = {}
         self.bytes_on_wire = 0.0
         self.control_messages = 0
 
     def _key(self, u, v):
         return (min(u, v), max(u, v))
 
-    def _hop(self, u: int, v: int, nbytes: float,
-             t_arrive: float) -> Tuple[float, float, Link]:
-        """Returns (delivery time at v, transmission start, link), honoring
-        the link's FIFO occupancy."""
+    # -- partial-loss goodput ------------------------------------------------
+
+    def set_link_loss(self, u: int, v: int, rate: float):
+        """Start charging the ``1/(1-rate)`` goodput factor on (u, v).
+
+        ``rate`` is clamped to [0, 0.99]: a rate that high is economically
+        severed already, and 1.0 would zero the divisor — total loss is the
+        stall/blackhole path's job, not a rate inflation."""
+        key = self._key(u, v)
+        rate = min(max(float(rate), 0.0), 0.99)
+        if rate <= 0.0:
+            self._link_loss.pop(key, None)
+        else:
+            self._link_loss[key] = rate
+
+    def clear_link_loss(self, u: int, v: int):
+        self._link_loss.pop(self._key(u, v), None)
+
+    def _eff_per_byte(self, link: Link, key: Tuple[int, int]) -> float:
+        loss = self._link_loss.get(key)
+        per = link.trans_delay_per_byte
+        return per / (1.0 - loss) if loss else per
+
+    def _hop(self, u: int, v: int, nbytes: float, t_arrive: float,
+             contend: bool = True) -> Tuple[float, float, Link, float]:
+        """Returns (delivery time at v, transmission start, link, effective
+        per-byte delay), honoring the link's FIFO occupancy for bulk
+        transfers and the bounded control-queue delay for datagrams."""
         link = self.topo.link(u, v)
         key = self._key(u, v)
-        start = max(t_arrive, self._link_free.get(key, 0.0))
-        done = start + link.latency_s + nbytes * link.trans_delay_per_byte
-        self._link_free[key] = start + nbytes * link.trans_delay_per_byte
-        return done, start, link
+        per = self._eff_per_byte(link, key)
+        if contend:
+            start = max(t_arrive, self._link_free.get(key, 0.0))
+            self._link_free[key] = start + nbytes * per
+        else:
+            backlog = max(0.0, self._link_free.get(key, 0.0) - t_arrive)
+            start = t_arrive + min(backlog, CONTROL_QUEUE_CAP_S)
+        done = start + link.latency_s + nbytes * per
+        return done, start, link, per
 
     def transfer(self, route: List[int], nbytes: float,
                  on_done: Callable[[float], None],
-                 handle: Optional[TransferHandle] = None) -> TransferHandle:
+                 handle: Optional[TransferHandle] = None,
+                 daemon: bool = False,
+                 contend: bool = True) -> TransferHandle:
         """Send ``nbytes`` along ``route`` (store-and-forward per hop).
 
         Returns a :class:`TransferHandle`; cancelling it before delivery
@@ -164,17 +219,24 @@ class Network:
         progress fields are primed from the *final* hop: the destination
         receives its first byte once that hop's transmission window opens
         and drains linearly at the hop's link rate, so a cancellation at
-        any virtual time knows exactly how many bytes already landed."""
+        any virtual time knows exactly how many bytes already landed.
+
+        ``daemon`` schedules the delivery as a daemon event — required for
+        self-rescheduling periodic traffic (monitor probes/heartbeats),
+        which must never keep ``sim.run()`` alive on its own.
+        ``contend=False`` sends a non-contending control datagram (see the
+        class docstring)."""
         handle = handle if handle is not None else TransferHandle()
         t = self.sim.now
-        last_start, last_link = t, None
+        last_start, last_link, last_per = t, None, 0.0
         for a, b in zip(route, route[1:]):
-            t, last_start, last_link = self._hop(a, b, nbytes, t)
+            t, last_start, last_link, last_per = self._hop(
+                a, b, nbytes, t, contend=contend)
             self.bytes_on_wire += nbytes
         handle.nbytes = float(nbytes)
         if last_link is not None:
             handle.t_first_byte = last_start + last_link.latency_s
-            handle.byte_rate = last_link.bytes_per_s
+            handle.byte_rate = 1.0 / last_per if last_per > 0 else float("inf")
         else:  # degenerate single-node route: instantly "delivered"
             handle.t_first_byte = t
             handle.byte_rate = float("inf")
@@ -185,7 +247,7 @@ class Network:
             handle.done_t = t
             on_done(t)
 
-        self.sim.at(t, deliver)
+        self.sim.at(t, deliver, daemon=daemon)
         return handle
 
     def control(self, u: int, v: int, on_done: Callable[[], None],

@@ -51,6 +51,14 @@ class Topology:
     def __init__(self):
         self.g = nx.Graph()
         self.nodes: Dict[int, NodeInfo] = {}
+        #: bumped on every structural or link-parameter change; cheap
+        #: cache-invalidation key for route caches (monitor heartbeats).
+        self.version = 0
+
+    def touch(self):
+        """Record an in-place mutation (e.g. link-degrade rewriting a
+        Link's rate/latency) that route caches must notice."""
+        self.version += 1
 
     # -- construction -------------------------------------------------------
 
@@ -58,18 +66,22 @@ class Topology:
         info = NodeInfo(node_id, **kw)
         self.nodes[node_id] = info
         self.g.add_node(node_id)
+        self.version += 1
         return info
 
     def remove_node(self, node_id: int):
         self.g.remove_node(node_id)
         self.nodes.pop(node_id, None)
+        self.version += 1
 
     def add_link(self, u: int, v: int, link: Link):
         self.g.add_edge(u, v, link=link)
+        self.version += 1
 
     def remove_link(self, u: int, v: int):
         if self.g.has_edge(u, v):
             self.g.remove_edge(u, v)
+            self.version += 1
 
     def has_link(self, u, v) -> bool:
         return self.g.has_edge(u, v)
@@ -158,6 +170,7 @@ def reshuffle_bandwidths(topo: Topology, *, seed: int,
     rng = random.Random(seed)
     for u, v in topo.g.edges:
         topo.g.edges[u, v]["link"].bandwidth_mbps = rng.uniform(*bw_range)
+    topo.touch()
 
 
 def pod_topology(

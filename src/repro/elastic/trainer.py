@@ -165,16 +165,22 @@ class ElasticTrainer:
                     base.prop_s, SEVERED_TRANS_S_PER_BYTE, base.sync_s)
             elif kind == "link-loss":
                 # Lossy link: retransmissions inflate the effective per-byte
-                # time by 1/(1-loss) — the goodput model. A missing rate
-                # means total loss (matching SimBackend); clamped just below
-                # 1.0 so the divisor stays finite — fully severing is
-                # link-fault's job.
+                # time by 1/(1-loss) — the goodput model SimBackend charges
+                # on the simulated network. A missing rate means total loss;
+                # at rate >= 1.0 the link is physically a blackhole, so it
+                # is severed outright — exactly what probe detection does to
+                # it on the simulator, keeping detected-mode traces diffable
+                # across substrates instead of leaving a ~100x-slow zombie.
                 rate = 1.0 if loss_rate is None else float(loss_rate)
-                rate = min(max(rate, 0.0), 0.99)
-                cur = ovs.get(key, base)
-                ovs[key] = NeighborLink(
-                    cur.prop_s, cur.trans_s_per_byte / (1.0 - rate),
-                    cur.sync_s)
+                rate = min(max(rate, 0.0), 1.0)
+                if rate >= 1.0:
+                    ovs[key] = NeighborLink(
+                        base.prop_s, SEVERED_TRANS_S_PER_BYTE, base.sync_s)
+                else:
+                    cur = ovs.get(key, base)
+                    ovs[key] = NeighborLink(
+                        cur.prop_s, cur.trans_s_per_byte / (1.0 - rate),
+                        cur.sync_s)
             else:
                 raise ValueError(f"not a link event kind: {kind!r}")
 

@@ -4,6 +4,7 @@ from repro.scenarios.generators import (
     GENERATORS,
     adversarial_churn,
     bandwidth_degradation,
+    detector_stress,
     diurnal_waves,
     flash_crowd,
     link_flaps,
@@ -23,4 +24,5 @@ __all__ = [
     "adversarial_churn",
     "bandwidth_degradation",
     "silent_failures",
+    "detector_stress",
 ]

@@ -27,6 +27,12 @@ Catalog:
   / ``link-loss``): subjects go bad without any churn event, so the cluster
   monitor's heartbeat/probe sweeps must detect them — the trace that turns
   handling-only benchmarks into detection + handling end-to-end numbers.
+* ``detector_stress``    — the suspicion detector's worst week on call:
+  partial-loss links across a whole spectrum of ``loss_levels`` (some below
+  and some above the consecutive-probe-failure threshold's practical reach),
+  blackhole flaps (``link-fault`` then a restoring ``link-join``), silent
+  node faults, and concurrent joins generating data-plane traffic that
+  congests the very paths heartbeats and probes ride.
 """
 from __future__ import annotations
 
@@ -412,6 +418,73 @@ def silent_failures(
                          })
 
 
+def detector_stress(
+    topo: Topology, *, seed: int, horizon_s: float,
+    loss_levels: Sequence[float] = (0.1, 0.3, 0.6, 0.9, 1.0),
+    n_node_faults: int = 1, n_flaps: int = 2, flap_len_s: float = 8.0,
+    n_joins: int = 2, max_links: int = 3,
+    bw_range=DEFAULT_BW_RANGE, lat_range=DEFAULT_LAT_RANGE,
+    compute_range=DEFAULT_COMPUTE_RANGE,
+) -> ScenarioTrace:
+    """Mixed-severity detection workload for the phi-accrual/adaptive layer.
+
+    One link per entry of ``loss_levels`` starts dropping probes (and, for
+    partial rates, inflating data-plane per-byte time by the goodput
+    factor); the lowest rates rarely produce the consecutive failures the
+    threshold needs (``fault-undetected`` candidates), the highest are
+    blackholes. ``n_flaps`` more links hard-fault and are restored by a
+    ``link-join`` ``flap_len_s`` later — if detection wins the race the
+    link is severed and re-connected, if restoration wins the fault is
+    cleared under the sweeps' nose. ``n_node_faults`` nodes go silent, and
+    ``n_joins`` scale-outs keep replication traffic on the wire so
+    heartbeats and probes contend with real bytes. Node-fault victims
+    exclude the scheduler node and faulted links avoid the victims (a
+    probe dying with its endpoint is the heartbeat path's detection, not
+    the link's); lossy and flapped links may share endpoints with each
+    other — interacting link faults are part of the stress."""
+    rng = random.Random(seed)
+    nodes = sorted(topo.active_nodes())
+    protected = min(nodes) if nodes else None  # scheduler node
+    events: List[ChurnEvent] = []
+    pool = [n for n in nodes if n != protected]
+    victims = rng.sample(pool, min(n_node_faults, max(len(pool) - 1, 0)))
+    for n in sorted(victims):
+        events.append(ChurnEvent(t=rng.uniform(0, horizon_s),
+                                 kind="node-fault", node=n))
+    victim_set = set(victims)
+    edges = [(min(u, v), max(u, v)) for u, v in sorted(topo.g.edges)
+             if not ({u, v} & victim_set)]
+    rng.shuffle(edges)
+    k = min(len(loss_levels), len(edges))
+    for rate, (u, v) in zip(loss_levels[:k], edges[:k]):
+        events.append(ChurnEvent(t=rng.uniform(0, horizon_s),
+                                 kind="link-loss", u=u, v=v,
+                                 loss_rate=float(rate)))
+    flaps = 0
+    for u, v in edges[k:k + n_flaps]:
+        t = rng.uniform(0, max(horizon_s - flap_len_s, 0.0))
+        link = topo.link(u, v)
+        events.append(ChurnEvent(t=t, kind="link-fault", u=u, v=v))
+        events.append(ChurnEvent(t=t + flap_len_s, kind="link-join", u=u, v=v,
+                                 bandwidth_mbps=link.bandwidth_mbps,
+                                 latency_s=link.latency_s))
+        flaps += 1
+    m = _Membership(nodes, rng)
+    for _ in range(n_joins):
+        events.append(_join_event(rng.uniform(0, horizon_s), m, rng,
+                                  max_links=max_links, min_links=2,
+                                  bw_range=bw_range, lat_range=lat_range,
+                                  compute_range=compute_range))
+    return ScenarioTrace("detector-stress", seed,
+                         sorted(events, key=lambda e: e.t), {
+                             "loss_levels": [float(r) for r in
+                                             loss_levels[:k]],
+                             "n_node_faults": len(victims),
+                             "n_flaps": flaps, "flap_len_s": flap_len_s,
+                             "n_joins": n_joins, "horizon_s": horizon_s,
+                         })
+
+
 GENERATORS = {
     "poisson-churn": poisson_churn,
     "diurnal-waves": diurnal_waves,
@@ -421,4 +494,5 @@ GENERATORS = {
     "adversarial-churn": adversarial_churn,
     "bandwidth-degradation": bandwidth_degradation,
     "silent-failures": silent_failures,
+    "detector-stress": detector_stress,
 }

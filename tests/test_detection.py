@@ -1,9 +1,11 @@
 """Detection-driven churn: silent faults (node-fault / link-fault /
 link-loss) must be *detected* by the cluster monitor's periodic heartbeat
-and probe sweeps before the engine can react — with fault-to-detection
-latency bounded by the sweep periods, deduplicated reporting, clean
-probe-counter lifecycle, lossless event JSON, and byte-identical same-seed
-ledgers with sweeps active."""
+and probe sweeps — heartbeats and probes ride the simulated network, the
+default detector is adaptive phi-accrual suspicion — before the engine can
+react. Pins fault-to-detection latency bounds, deduplicated reporting,
+clean probe-counter lifecycle, lossless event JSON, and byte-identical
+same-seed ledgers with sweeps active. (Phi/adaptive-specific behavior
+lives in tests/test_phi_detection.py.)"""
 import json
 
 import pytest
@@ -15,6 +17,9 @@ from repro.core.monitor import (
     LOSS_GIVEUP_SWEEPS,
     PROBE_FAILURES_FOR_LINK_DOWN,
     PROBE_PERIOD_S,
+    PROBE_TIMEOUT_S,
+    SWEEP_MAX_FACTOR,
+    SWEEP_TIGHTEN_FACTOR,
 )
 
 MB = 1024 * 1024
@@ -50,10 +55,11 @@ def test_node_fault_detected_within_heartbeat_bounds():
     assert rec.detail["fault_t"] == pytest.approx(t_fault)
     det = rec.detail["detection_s"]
     assert det == pytest.approx(rec.detail["detected_t"] - t_fault)
-    # A lapsed heartbeat needs at least the timeout and at most two extra
-    # sweep periods (last refresh ≤ one period before the fault, plus the
-    # sweep-grid quantization of the check itself).
-    assert (HEARTBEAT_TIMEOUT_S - 1e-9 <= det
+    # Phi suspicion needs at least one expected inter-arrival to lapse and
+    # crosses the threshold within the old fixed-timeout envelope (timeout
+    # plus two sweep periods of grid quantization) — adaptive detection is
+    # never slower than the baseline it replaced.
+    assert (HEARTBEAT_PERIOD_S < det
             <= HEARTBEAT_TIMEOUT_S + 2 * HEARTBEAT_PERIOD_S + 1e-9)
     assert victim not in cl.topo.active_nodes()
 
@@ -67,8 +73,14 @@ def test_link_fault_detected_within_probe_bounds():
         ChurnEvent(t=t_fault, kind="link-fault", u=u, v=v)])
     rec = _record(ledger, "link-failed")
     det = rec.detail["detection_s"]
-    lo = (PROBE_FAILURES_FOR_LINK_DOWN - 1) * PROBE_PERIOD_S
-    hi = (PROBE_FAILURES_FOR_LINK_DOWN + 1) * PROBE_PERIOD_S
+    # The threshold needs PROBE_FAILURES_FOR_LINK_DOWN consecutive failed
+    # probes, each judged PROBE_TIMEOUT_S after its sweep; sweeps tighten
+    # to SWEEP_TIGHTEN_FACTOR once failures accumulate and back off at
+    # most one step before the first failure lands.
+    lo = (PROBE_FAILURES_FOR_LINK_DOWN * SWEEP_TIGHTEN_FACTOR
+          * PROBE_PERIOD_S)
+    hi = ((PROBE_FAILURES_FOR_LINK_DOWN + 1) * PROBE_PERIOD_S
+          + PROBE_TIMEOUT_S)
     assert lo < det <= hi + 1e-9
     assert not cl.topo.has_link(u, v)
 
@@ -98,7 +110,11 @@ def test_lossless_link_loss_expires_undetected():
         ChurnEvent(t=t_fault, kind="link-loss", u=u, v=v, loss_rate=0.0)])
     rec = _record(ledger, "fault-undetected")
     assert rec.detail["fault_t"] == pytest.approx(t_fault)
-    assert cl.sim.now >= t_fault + LOSS_GIVEUP_SWEEPS * PROBE_PERIOD_S - 1e-9
+    # The give-up window is sized in fully backed-off sweep periods: the
+    # adaptive sweeps get their LOSS_GIVEUP_SWEEPS chances even at max
+    # backoff before the drain declares the fault undetectable.
+    giveup = LOSS_GIVEUP_SWEEPS * PROBE_PERIOD_S * SWEEP_MAX_FACTOR
+    assert cl.sim.now >= t_fault + giveup - 1e-9
     assert cl.topo.has_link(u, v)  # never declared down
 
 
@@ -468,19 +484,20 @@ def test_trainer_backend_routes_faults_like_detected_churn():
 
 
 def test_trainer_link_loss_missing_rate_means_total_loss():
-    """A link-loss with no loss_rate means total loss on both substrates
-    (SimBackend severs after probe detection; the trainer inflates to the
-    clamped 1/(1-0.99) goodput factor) — not a silent no-op."""
-    from repro.elastic.trainer import ElasticTrainer
+    """A link-loss with no loss_rate means total loss on both substrates:
+    SimBackend severs the link after probe detection, and the trainer
+    severs it outright (SEVERED_TRANS_S_PER_BYTE) — the same terminal
+    state, keeping detected-mode traces diffable across substrates."""
+    from repro.elastic.trainer import SEVERED_TRANS_S_PER_BYTE, ElasticTrainer
 
     class _Dev:
         def __init__(self, i):
             self.id = i
 
     tr = ElasticTrainer(None, devices=[_Dev(0), _Dev(1)], initial=2)
-    base = tr.effective_link(0).trans_s_per_byte
     tr.apply_link_event("link-loss", [0], link=(0, 9))
-    assert tr.effective_link(0).trans_s_per_byte == pytest.approx(base / 0.01)
+    assert (tr.effective_link(0).trans_s_per_byte
+            == pytest.approx(SEVERED_TRANS_S_PER_BYTE))
 
 
 def test_omniscient_trace_never_starts_sweeps():

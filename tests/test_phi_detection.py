@@ -1,0 +1,492 @@
+"""Phi-accrual suspicion, adaptive sweeps, and detection traffic riding the
+simulated network.
+
+Covers the detection-layer redesign: probes/heartbeats as real (daemon,
+non-contending) transfers whose delivery the network delays or drops
+organically, the phi suspicion score and its latency bounds, adaptive sweep
+backoff/tightening, per-link loss RNG streams, the sweep-generation counter,
+partial-loss data-plane goodput inflation, monitor-owned give-up deadlines,
+and same-seed determinism with all of it active.
+"""
+import pytest
+
+from repro.core import ChurnEvent, Link, SimCluster, Topology, random_edge_topology, run_trace_sim
+from repro.core.monitor import (
+    HEARTBEAT_PERIOD_S,
+    PHI_ELEVATED,
+    PHI_THRESHOLD,
+    SWEEP_MAX_FACTOR,
+    SWEEP_TIGHTEN_FACTOR,
+    phi_score,
+)
+from repro.core.simulator import CONTROL_QUEUE_CAP_S, Network, Sim
+
+MB = 1024 * 1024
+
+
+def _cluster(n=8, seed=0, state=32 * MB, tensor=1 * MB):
+    topo = random_edge_topology(n, seed=seed)
+    return SimCluster(topo, state_bytes=state,
+                      tensor_sizes=[tensor] * (state // tensor))
+
+
+def _advance(cl, seconds):
+    cl.sim.run(until=cl.sim.now + seconds)
+
+
+def _sweep_times(mon):
+    """Wrap check_heartbeats to record executed heartbeat-sweep instants
+    (stale-generation chains return before checking, so they don't count)."""
+    times = []
+    orig = mon.check_heartbeats
+
+    def wrapped():
+        times.append(mon.sim.now)
+        return orig()
+
+    mon.check_heartbeats = wrapped
+    return times
+
+
+# ---------------------------------------------------------------------------
+# Phi score sanity + latency bounds.
+# ---------------------------------------------------------------------------
+
+
+def test_phi_score_monotone_and_calibrated():
+    assert phi_score(0.0, 2.0, 0.5) < PHI_ELEVATED
+    xs = [phi_score(x, 2.0, 0.5) for x in (1.0, 2.0, 3.0, 4.0, 5.0, 6.0)]
+    assert xs == sorted(xs)
+    assert phi_score(2.0, 2.0, 0.5) == pytest.approx(0.301, abs=1e-3)
+    assert phi_score(6.0, 2.0, 0.5) > PHI_THRESHOLD  # 8 sigma: surely dead
+
+
+def test_phi_detection_faster_under_churn_no_worse_quiet():
+    """The acceptance-criterion shape, pinned against the *same* scenario
+    the CI smoke A/B runs (benchmarks.common.measure_detection_latency —
+    not a re-implementation that could drift): adaptive phi-accrual
+    detects a silent node death faster than the fixed-timeout baseline
+    while churn keeps the sweeps tightened, and no later when quiet."""
+    common = pytest.importorskip(
+        "benchmarks.common", reason="benchmarks importable from repo root")
+    sizes = common.tensor_sizes_for(16 * MB, 1 * MB)
+
+    def detect(detector, congested):
+        return common.measure_detection_latency(
+            8, 16 * MB, sizes, seed=0, detector=detector,
+            congested=congested)["detection_s"]
+
+    assert detect("phi", True) < detect("fixed", True)
+    assert detect("phi", False) <= detect("fixed", False) + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Adaptive sweep periods: back off when quiet, tighten under suspicion.
+# ---------------------------------------------------------------------------
+
+
+def test_sweeps_back_off_when_quiet_and_tighten_on_suspicion():
+    cl = _cluster()
+    mon = cl.scheduler.monitor
+    times = _sweep_times(mon)
+    mon.start_sweeps()
+    _advance(cl, 40.0)
+    gaps = [b - a for a, b in zip(times, times[1:])]
+    # Quiet: geometric backoff up to the cap (the first gap already
+    # carries one backoff step, applied at the first sweep).
+    assert gaps[0] == pytest.approx(HEARTBEAT_PERIOD_S * 1.5)
+    assert max(gaps) == pytest.approx(HEARTBEAT_PERIOD_S * SWEEP_MAX_FACTOR)
+    assert all(b >= a - 1e-9 for a, b in zip(gaps, gaps[1:]))
+    # A node going silent raises suspicion: the next sweeps tighten.
+    victim = [n for n in cl.topo.active_nodes() if n != cl.scheduler.node][0]
+    mon.inject_node_fault(victim)
+    n_before = len(times)
+    _advance(cl, 30.0)
+    tight = [b - a for a, b in zip(times[n_before:], times[n_before + 1:])]
+    assert min(tight) == pytest.approx(
+        HEARTBEAT_PERIOD_S * SWEEP_TIGHTEN_FACTOR)
+    assert victim in mon.faulted_nodes() or victim not in cl.topo.active_nodes()
+
+
+def test_stop_start_sweeps_does_not_double_the_chain():
+    """Satellite: stop_sweeps() then start_sweeps() must leave exactly one
+    sweep chain — the orphaned chain self-cancels via the generation
+    counter instead of resuming alongside the new one (which would double
+    sweep frequency and RNG draws)."""
+    cl = _cluster()
+    mon = cl.scheduler.monitor
+    times = _sweep_times(mon)
+    mon.start_sweeps(detector="fixed")  # fixed periods: gaps are exact
+    _advance(cl, 7.0)
+    mon.stop_sweeps()
+    mon.start_sweeps(detector="fixed")
+    _advance(cl, 20.0)
+    gaps = [b - a for a, b in zip(times, times[1:])]
+    assert gaps, times
+    # A doubled chain would interleave sweeps at half the period.
+    assert min(gaps) >= HEARTBEAT_PERIOD_S - 1e-9
+    assert len(times) == len(set(times))
+
+
+# ---------------------------------------------------------------------------
+# Satellite: per-link RNG streams — loss outcomes invariant to churn
+# elsewhere in the overlay.
+# ---------------------------------------------------------------------------
+
+
+def test_lossy_link_detection_invariant_to_unrelated_churn():
+    """Churn that changes the probe-target list (here: a silent node whose
+    links drop out of the sweep) must not reshuffle the loss draws — hence
+    the detection time — of an unrelated lossy link."""
+
+    def lossy_detection(extra_fault):
+        cl = _cluster(seed=1)
+        cl.train(1)
+        sched = cl.scheduler.node
+        edges = sorted(cl.topo.g.edges)
+        lossy = [e for e in edges if sched not in e][0]
+        other = [n for n in cl.topo.active_nodes()
+                 if n != sched and n not in lossy][0]
+        t0 = cl.sim.now
+        events = [ChurnEvent(t=t0 + 0.5, kind="link-loss",
+                             u=lossy[0], v=lossy[1], loss_rate=0.9)]
+        if extra_fault:
+            # Same trace time => sweeps start on the same grid; the node
+            # fault still reshapes _probe_targets from the first sweep.
+            events.append(ChurnEvent(t=t0 + 0.5, kind="node-fault",
+                                     node=other))
+        ledger, _ = run_trace_sim(cl, events, detector="fixed")
+        recs = [r for r in ledger if r.action == "link-failed"
+                and tuple(r.subject) == lossy]
+        assert recs, ledger.actions()
+        return recs[0].detail["detected_t"]
+
+    assert lossy_detection(False) == pytest.approx(lossy_detection(True))
+
+
+# ---------------------------------------------------------------------------
+# Detection traffic rides the network: congestion, blackholes, multipath.
+# ---------------------------------------------------------------------------
+
+
+def test_control_datagram_delayed_by_congestion_but_not_starved():
+    """A non-contending datagram behind a bulk transfer waits at most
+    CONTROL_QUEUE_CAP_S — congestion shows up in control-plane latency
+    without a probe queueing behind an entire replication stream."""
+    topo = Topology()
+    for i in (0, 1):
+        topo.add_node(i)
+    link = Link(100.0, 0.01)
+    topo.add_link(0, 1, link)
+    sim = Sim()
+    net = Network(sim, topo)
+    bulk_s = link.trans_delay_per_byte * 50 * MB  # ~4 s of occupancy
+    net.transfer([0, 1], 50 * MB, lambda t: None)
+    got = []
+    net.transfer([0, 1], 256.0, got.append, daemon=True, contend=False)
+    sim.run()
+    assert got, "datagram never delivered"
+    expect = CONTROL_QUEUE_CAP_S + link.latency_s + 256 * link.trans_delay_per_byte
+    assert got[0] == pytest.approx(expect)
+    assert bulk_s > CONTROL_QUEUE_CAP_S  # the cap actually bit
+
+
+def test_heartbeats_survive_silent_relay_via_disjoint_route():
+    """A healthy node whose primary heartbeat route transits a silent
+    relay must not be declared dead: the redundant copy rides a
+    relay-disjoint route. The relay itself is detected."""
+    topo = Topology()
+    for i in range(4):
+        topo.add_node(i)
+    topo.add_link(1, 2, Link(1000.0, 0.001))  # fast: primary 1->2->0
+    topo.add_link(2, 0, Link(1000.0, 0.001))
+    topo.add_link(1, 3, Link(100.0, 0.02))  # slow alternate 1->3->0
+    topo.add_link(3, 0, Link(100.0, 0.02))
+    cl = SimCluster(topo, state_bytes=4 * MB, tensor_sizes=[1 * MB] * 4)
+    cl.train(1)
+    assert cl.scheduler.node == 0
+    ledger, _ = run_trace_sim(cl, [
+        ChurnEvent(t=cl.sim.now + 0.5, kind="node-fault", node=2)])
+    failed = [r.subject for r in ledger if r.action == "node-failed"]
+    assert (2,) in failed
+    assert (1,) not in failed, ledger.actions()
+    assert 1 in cl.topo.active_nodes()
+
+
+def test_probe_timeout_on_congested_slow_link_is_organic():
+    """_probe_ok is gone: a probe fails when its transfer misses the
+    deadline. A link degraded to a crawl (latency above the probe timeout)
+    organically fails probes and gets detected — no fault table entry."""
+    cl = _cluster()
+    cl.train(1)
+    u, v = [e for e in sorted(cl.topo.g.edges)
+            if cl.scheduler.node not in e][0]
+    t0 = cl.sim.now
+    ledger, _ = run_trace_sim(cl, [
+        # Something must start the sweeps (lazy start): a lossless loss
+        # fault on another link injects nothing observable.
+        ChurnEvent(t=t0 + 0.1, kind="link-loss", loss_rate=0.0,
+                   u=[e for e in sorted(cl.topo.g.edges) if e != (u, v)][0][0],
+                   v=[e for e in sorted(cl.topo.g.edges) if e != (u, v)][0][1]),
+        # Degrade the victim link so its propagation alone exceeds the
+        # probe timeout: every probe misses the deadline.
+        ChurnEvent(t=t0 + 0.2, kind="link-degrade", u=u, v=v,
+                   latency_s=2.0),
+    ])
+    recs = [r for r in ledger if r.action == "link-failed"
+            and tuple(r.subject) == (min(u, v), max(u, v))]
+    assert recs, ledger.actions()
+    assert recs[0].detail.get("fault_t") is None  # nothing was injected
+
+
+def test_link_join_restoring_faulted_link_wins_race_against_detection():
+    """A silent link-fault never removes the link from the topology, so a
+    restoring link-join must clear the pending fault (terminal
+    fault-cleared record) instead of being skipped-link-exists — leaving
+    the healthy link to be falsely severed by the probes later."""
+    cl = _cluster()
+    cl.train(1)
+    u, v = [e for e in sorted(cl.topo.g.edges)
+            if cl.scheduler.node not in e][0]
+    link = cl.topo.link(u, v)
+    t0 = cl.sim.now
+    ledger, _ = run_trace_sim(cl, [
+        ChurnEvent(t=t0 + 0.5, kind="link-fault", u=u, v=v),
+        # Restored well before the ~3 s probe detection: restoration wins.
+        ChurnEvent(t=t0 + 1.0, kind="link-join", u=u, v=v,
+                   bandwidth_mbps=link.bandwidth_mbps,
+                   latency_s=link.latency_s),
+    ])
+    actions = ledger.actions()
+    assert "link-restored" in actions, actions
+    assert "fault-cleared" in actions
+    assert "link-failed" not in actions  # the healthy link is NOT severed
+    assert "skipped-link-exists" not in actions
+    assert cl.topo.has_link(u, v)
+
+
+def test_link_join_after_detection_reconnects_normally():
+    """The other side of the flap race: detection wins, the link is
+    severed, and the late link-join re-connects it fresh."""
+    cl = _cluster()
+    cl.train(1)
+    u, v = [e for e in sorted(cl.topo.g.edges)
+            if cl.scheduler.node not in e][0]
+    link = cl.topo.link(u, v)
+    t0 = cl.sim.now
+    ledger, _ = run_trace_sim(cl, [
+        ChurnEvent(t=t0 + 0.5, kind="link-fault", u=u, v=v),
+        ChurnEvent(t=t0 + 8.0, kind="link-join", u=u, v=v,
+                   bandwidth_mbps=link.bandwidth_mbps,
+                   latency_s=link.latency_s),
+    ])
+    actions = ledger.actions()
+    assert "link-failed" in actions
+    assert "link-connected" in actions
+    assert cl.topo.has_link(u, v)
+
+
+# ---------------------------------------------------------------------------
+# Partial-loss data-plane goodput (tentpole: SimBackend extension).
+# ---------------------------------------------------------------------------
+
+
+def test_partial_loss_inflates_data_plane_per_byte_time():
+    topo = Topology()
+    for i in (0, 1):
+        topo.add_node(i)
+    link = Link(100.0, 0.01)
+    topo.add_link(0, 1, link)
+    sim = Sim()
+    net = Network(sim, topo)
+    done = []
+    net.transfer([0, 1], 1 * MB, done.append)
+    sim.run()
+    clean = done[0]
+    net.set_link_loss(0, 1, 0.5)
+    t0 = sim.now
+    net.transfer([0, 1], 1 * MB, done.append)
+    sim.run()
+    lossy = done[1] - t0
+    trans = 1 * MB * link.trans_delay_per_byte
+    assert clean == pytest.approx(link.latency_s + trans)
+    assert lossy == pytest.approx(link.latency_s + 2 * trans)
+    net.clear_link_loss(0, 1)
+    t0 = sim.now
+    net.transfer([0, 1], 1 * MB, done.append)
+    sim.run()
+    assert done[2] - t0 == pytest.approx(clean)
+
+
+def test_partial_link_loss_slows_replication_streams():
+    """A silent partial loss on a plan link slows the join's shard stream
+    via the goodput factor: the join completes later than the clean run
+    even if probe detection never trips (loss below the consecutive
+    threshold is possible), with in-flight physics — no replan needed."""
+
+    def ready_time(loss_rate):
+        cl = _cluster(state=64 * MB)
+        cl.train(1)
+        t0 = cl.sim.now
+        links = {1: (40.0, 0.01), 2: (50.0, 0.01)}
+        events = [ChurnEvent(t=t0 + 0.1, kind="join", node=100, links=links)]
+        if loss_rate is not None:
+            # After the join created the link, before its shard stream
+            # launches (negotiation + measurement + planning take ~0.5 s).
+            events.append(ChurnEvent(t=t0 + 0.3, kind="link-loss",
+                                     u=2, v=100, loss_rate=loss_rate))
+        ledger, _ = run_trace_sim(cl, events)
+        ready = [r for r in ledger if r.action == "ready"]
+        replanned = [r for r in ledger if r.action == "replanned"]
+        return (ready[0].t if ready else None,
+                len(replanned), ledger.actions())
+
+    t_clean, _, _ = ready_time(None)
+    t_lossy, replans, actions = ready_time(0.4)
+    assert t_clean is not None and t_lossy is not None, actions
+    assert t_lossy > t_clean  # goodput inflation reached the data plane
+
+
+def test_giveup_expiry_keeps_world_lossy():
+    """fault-undetected ends detection *attribution*, not physics: after
+    the drain gives up on a lossy link, its goodput inflation persists
+    (matching TrainerBackend, which keeps 1/(1-loss) forever) and probes
+    keep being dropped — only link churn repairs the world."""
+    cl = _cluster()
+    cl.train(1)
+    u, v = [e for e in sorted(cl.topo.g.edges)
+            if cl.scheduler.node not in e][0]
+    ledger, _ = run_trace_sim(cl, [
+        # 0.05 loss: two consecutive probe drops (p=0.0025/sweep) are
+        # vanishingly unlikely within the give-up window for this seed.
+        ChurnEvent(t=cl.sim.now + 0.5, kind="link-loss", u=u, v=v,
+                   loss_rate=0.05)])
+    assert "fault-undetected" in ledger.actions(), ledger.actions()
+    mon = cl.scheduler.monitor
+    key = (min(u, v), max(u, v))
+    assert key in cl.net._link_loss  # data-plane inflation persists
+    assert mon._expired_loss.get(key) == pytest.approx(0.05)
+    mon.reset_link(u, v)  # the link itself churns: now the world heals
+    assert key not in cl.net._link_loss
+    assert key not in mon._expired_loss
+
+
+def test_inject_then_clear_restores_clean_goodput():
+    cl = _cluster()
+    mon = cl.scheduler.monitor
+    u, v = sorted(cl.topo.g.edges)[0]
+    mon.inject_link_loss(u, v, 0.5)
+    assert cl.net._link_loss  # inflation installed
+    mon.reset_link(u, v)  # e.g. the link churned / re-joined
+    assert not cl.net._link_loss
+
+
+# ---------------------------------------------------------------------------
+# Satellite: stale heartbeat entries of non-live nodes are GC'd.
+# ---------------------------------------------------------------------------
+
+
+def test_stale_heartbeat_entry_of_parked_node_is_dropped():
+    """A node in a state outside active/standby can neither beat nor be
+    detected; its heartbeat entry must be dropped, not skipped forever."""
+    cl = _cluster()
+    mon = cl.scheduler.monitor
+    victim = [n for n in cl.topo.active_nodes() if n != cl.scheduler.node][0]
+    mon.heartbeat(victim)
+    cl.topo.nodes[victim].state = "draining"  # neither live nor failed/left
+    assert mon.check_heartbeats() == []
+    assert victim not in mon.last_heartbeat  # entry GC'd, no leak
+    assert victim not in mon._hb_stats
+    # And it is never "detected" later off the stale entry.
+    cl.sim.after(60.0, lambda: None)
+    cl.sim.run()
+    assert mon.check_heartbeats() == []
+
+
+# ---------------------------------------------------------------------------
+# Measurement traffic occupies the network only in detected mode.
+# ---------------------------------------------------------------------------
+
+
+def test_measure_links_occupies_network_only_with_sweeps_on():
+    cl = _cluster()
+    mon = cl.scheduler.monitor
+    node = cl.scheduler.node
+    peers = cl.topo.neighbors(node)[:2]
+    mon.measure_links(node, peers)
+    assert not cl.net._link_free  # omniscient mode: bookkeeping only
+    mon.start_sweeps()
+    mon.measure_links(node, peers)
+    assert cl.net._link_free  # iperf bursts reserved real link time
+
+
+# ---------------------------------------------------------------------------
+# Determinism: adaptive periods + network-riding probes stay byte-identical.
+# ---------------------------------------------------------------------------
+
+
+def _stress_ledger(detector):
+    from repro.scenarios import detector_stress
+
+    topo = random_edge_topology(10, seed=3)
+    trace = detector_stress(topo, seed=11, horizon_s=30.0)
+    cl = SimCluster(topo, state_bytes=16 * MB, tensor_sizes=[1 * MB] * 16)
+    cl.train(1)
+    ledger, _ = run_trace_sim(cl, trace, detector=detector)
+    return trace, ledger
+
+
+@pytest.mark.parametrize("detector", ["fixed", "phi"])
+def test_same_seed_detector_stress_byte_identical(detector):
+    trace1, l1 = _stress_ledger(detector)
+    trace2, l2 = _stress_ledger(detector)
+    assert [e.to_json() for e in trace1] == [e.to_json() for e in trace2]
+    assert l1.canonical_bytes() == l2.canonical_bytes()
+    # The trace exercised the whole detection surface.
+    actions = l1.actions()
+    assert "fault-injected" in actions
+    assert "link-failed" in actions
+    assert "node-failed" in actions
+    assert "ready" in actions
+
+
+def test_detector_stress_generator_mixes_severities():
+    from repro.scenarios import detector_stress
+
+    topo = random_edge_topology(12, seed=5)
+    trace = detector_stress(topo, seed=2, horizon_s=25.0)
+    kinds = [e.kind for e in trace]
+    assert "link-loss" in kinds
+    assert "link-fault" in kinds
+    assert "link-join" in kinds  # the flap restores
+    assert "node-fault" in kinds
+    assert "join" in kinds
+    rates = sorted(e.loss_rate for e in trace if e.kind == "link-loss")
+    assert rates == sorted(trace.meta["loss_levels"])
+    assert min(rates) < 0.5 < max(rates)  # genuinely mixed severities
+    ts = [e.t for e in trace]
+    assert ts == sorted(ts)
+
+
+# ---------------------------------------------------------------------------
+# Give-up deadlines are monitor-owned and drive the drain.
+# ---------------------------------------------------------------------------
+
+
+def test_detection_horizon_tracks_pending_faults():
+    cl = _cluster()
+    mon = cl.scheduler.monitor
+    assert mon.detection_horizon() is None
+    u, v = sorted(cl.topo.g.edges)[0]
+    mon.inject_link_fault(u, v)
+    h1 = mon.detection_horizon()
+    assert h1 is not None and h1 > cl.sim.now
+    victim = [n for n in cl.topo.active_nodes() if n != cl.scheduler.node][0]
+    mon.inject_node_fault(victim)
+    assert mon.detection_horizon() == pytest.approx(min(
+        h1, cl.sim.now
+        + 16 * HEARTBEAT_PERIOD_S * SWEEP_MAX_FACTOR))  # NODE_GIVEUP_SWEEPS
+    # Clearing the faults clears the horizon.
+    mon.reset_link(u, v)
+    cl.scheduler.monitor.register_leave(victim, failure=True)
+    assert mon.detection_horizon() is None
