@@ -12,6 +12,7 @@ BENCHMARKS = [
     ("fig7_scaleout_delay", "benchmarks.scaleout_delay"),
     ("fig8_gpt2_scaleout", "benchmarks.gpt2_scaleout"),
     ("fig9_link_events", "benchmarks.link_events"),
+    ("failover_delay", "benchmarks.failover_delay"),
     ("fig10_idle_time", "benchmarks.idle_time"),
     ("fig11_14_convergence", "benchmarks.convergence"),
     ("fig15_replication_ablation", "benchmarks.replication_ablation"),

@@ -20,6 +20,7 @@ from repro.core.plans import (
     single_source_plan,
 )
 from repro.core.topology import Link, Topology, random_edge_topology, pod_topology
+from repro.core.control import ControlPlane, FailoverResult, SchedulerSnapshot
 from repro.core.negotiation import ChaosScheduler, InflightScaleOut, SimCluster
 from repro.core.engine import (
     ChurnEngine,
@@ -56,6 +57,9 @@ __all__ = [
     "random_edge_topology",
     "pod_topology",
     "ChaosScheduler",
+    "ControlPlane",
+    "FailoverResult",
+    "SchedulerSnapshot",
     "InflightScaleOut",
     "SimCluster",
     "ChurnEngine",

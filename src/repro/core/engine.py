@@ -42,16 +42,21 @@ from __future__ import annotations
 
 import hashlib
 import json
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Dict, Iterable, List, Optional, Tuple
 
+from repro.core.control import ControlPlane
 from repro.core.negotiation import InflightScaleOut, SimCluster
 from repro.core.topology import Link
 
 EVENT_KINDS = ("join", "leave", "node-failure",
                "link-join", "link-leave", "link-failure", "link-degrade",
                # silent faults: no churn emitted, the monitor must detect
-               "node-fault", "link-fault", "link-loss")
+               "node-fault", "link-fault", "link-loss",
+               # the scheduler node itself fails silently: the deputies'
+               # ack-watch must detect it and elect a successor
+               # (repro.core.control)
+               "scheduler-fault")
 
 #: floor for link-degrade rates: degrading to ≤ 0 Mbit/s would break the
 #: transfer-time model (divide by zero); severing is link-failure's job.
@@ -72,6 +77,13 @@ class ChurnEvent:
     bandwidth_mbps: Optional[float] = None  # link-join / link-degrade: new rate
     latency_s: Optional[float] = None  # link-join / link-degrade: new latency
     loss_rate: Optional[float] = None  # link-loss: probe drop probability
+    # Election-ledger fields (scheduler-fault): a recorded fail-over can be
+    # normalized back into a replayable trace carrying its outcome, and
+    # ``new_home`` doubles as the preferred successor when the event is
+    # replayed live (honored when it is a live deputy).
+    term: Optional[int] = None
+    new_home: Optional[int] = None
+    election_s: Optional[float] = None
 
     def __post_init__(self):
         if self.kind not in EVENT_KINDS:
@@ -95,6 +107,12 @@ class ChurnEvent:
             out["latency_s"] = self.latency_s
         if self.loss_rate is not None:
             out["loss_rate"] = self.loss_rate
+        if self.term is not None:
+            out["term"] = self.term
+        if self.new_home is not None:
+            out["new_home"] = self.new_home
+        if self.election_s is not None:
+            out["election_s"] = self.election_s
         return out
 
     @classmethod
@@ -107,7 +125,9 @@ class ChurnEvent:
                    compute_s=float(d.get("compute_s", 1.0)),
                    bandwidth_mbps=d.get("bandwidth_mbps"),
                    latency_s=d.get("latency_s"),
-                   loss_rate=d.get("loss_rate"))
+                   loss_rate=d.get("loss_rate"),
+                   term=d.get("term"), new_home=d.get("new_home"),
+                   election_s=d.get("election_s"))
 
     def link_objects(self) -> Dict[int, Link]:
         return {p: Link(bw, lat) for p, (bw, lat) in (self.links or {}).items()}
@@ -240,6 +260,20 @@ class SimBackend:
         mon.on_node_detected = self._node_failure_detected
         mon.on_link_detected = self._link_failure_detected
         mon.on_fault_cleared = self._fault_cleared
+        # Decentralized control plane (repro.core.control): deputies hold a
+        # replica of the scheduler state and elect a successor when the
+        # scheduler itself goes silently bad. Inert (no daemons, no
+        # datagrams) until the first fault starts the sweeps.
+        self.control = ControlPlane(cluster.sim, cluster.net, cluster.topo,
+                                    mon, cluster.scheduler)
+        self.control.inflight_provider = lambda: [
+            (self._inflight_seq.get(fl.new_node, -1), fl)
+            for fl in self.inflight if not fl.aborted]
+        self.control.on_failover = self._failover_installed
+        self._sched_fault_seq = -1
+        #: omniscient events arriving while leaderless: nobody can process a
+        #: join/leave request until a successor is installed.
+        self._parked: List[Tuple[int, ChurnEvent]] = []
 
     # -- engine protocol -----------------------------------------------------
 
@@ -252,6 +286,14 @@ class SimBackend:
 
     def handle(self, seq: int, ev: ChurnEvent, ledger: EventLedger):
         self._ledger = ledger
+        if (self.control.leaderless and ev.kind not in
+                ("scheduler-fault", "node-fault", "link-fault", "link-loss")):
+            # Leaderless window: silent faults still change the world (they
+            # ask no one's permission), but omniscient events either park
+            # (requests — nobody can grant them) or convert to pending
+            # faults (physics that happened unannounced).
+            self._defer_leaderless(seq, ev, ledger)
+            return
         dispatch = {
             "join": self._on_join,
             "leave": self._on_leave,
@@ -263,6 +305,7 @@ class SimBackend:
             "node-fault": self._on_node_fault,
             "link-fault": self._on_link_fault,
             "link-loss": self._on_link_loss,
+            "scheduler-fault": self._on_scheduler_fault,
         }
         dispatch[ev.kind](seq, ev, ledger)
 
@@ -286,18 +329,45 @@ class SimBackend:
         while True:
             sim.run()
             self._pump(ledger)
-            horizon = mon.detection_horizon()
-            if horizon is None:
+            horizons = [h for h in (mon.detection_horizon(),
+                                    self.control.detection_horizon())
+                        if h is not None]
+            if not horizons:
                 break
+            horizon = min(horizons)
             step_to = min(max(horizon, sim.now), sim.now + mon.drain_step_s())
             sim.run(until=max(step_to, sim.now + 1e-9))
             self._pump(ledger)
+            expired = self.control.expire(sim.now)
+            if expired is not None:
+                # No quorum anywhere by the deadline (minority partition
+                # side): the fail-over fails terminally and the cluster
+                # freezes — parked requests are refused, not forgotten.
+                ledger.append(self._sched_fault_seq, sim.now,
+                              "scheduler-fault", expired["old_home"],
+                              "election-no-quorum",
+                              {"fault_t": expired["fault_t"],
+                               "terms_tried": expired["terms_tried"]})
+                self._fault_seq.pop(("node", expired["old_home"]), None)
+                self._flush_parked_frozen(ledger)
             for kind, subject, fault_t in mon.expire_faults(sim.now):
                 key = (("node", subject[0]) if kind == "node-fault"
                        else ("link", subject))
                 seq = self._fault_seq.pop(key, -1)
                 ledger.append(seq, sim.now, kind, subject, "fault-undetected",
                               {"fault_t": fault_t})
+        self._flush_parked_frozen(ledger)
+
+    def _flush_parked_frozen(self, ledger: EventLedger):
+        """A frozen (no-quorum) cluster can never process parked requests:
+        give each a terminal record so every trace event reaches one."""
+        if not self.control.frozen:
+            return
+        for seq, ev in self._parked:
+            subject = ev.node if ev.node is not None else (ev.u, ev.v)
+            ledger.append(seq, self.cluster.sim.now, ev.kind, subject,
+                          "skipped-leaderless")
+        self._parked = []
 
     # -- helpers -------------------------------------------------------------
 
@@ -311,6 +381,11 @@ class SimBackend:
 
     def _pump(self, ledger: EventLedger):
         """Finalize replications whose transfers have drained."""
+        if self.control.leaderless:
+            # Finalization (state install + policy swap + activation) is
+            # leader work: drained replications wait for the election —
+            # exactly the window benchmarks/failover_delay.py measures.
+            return
         for fl in list(self.inflight):
             if fl.aborted:
                 self.inflight.remove(fl)
@@ -517,6 +592,11 @@ class SimBackend:
     def _start_sweeps(self):
         self.sched.monitor.start_sweeps(seed=self.detection_seed,
                                         detector=self.detector)
+        # The control plane rides the same lazy start: from the first fault
+        # on, deputies hold a continuously synced replica of the scheduler
+        # state and watch heartbeat acks — so a later scheduler-fault finds
+        # replicas that honestly predate it.
+        self.control.start(seed=self.detection_seed)
 
     @staticmethod
     def _route_uses_link(route, key) -> bool:
@@ -563,8 +643,9 @@ class SimBackend:
             ledger.append(seq, ev.t, ev.kind, node, "skipped-not-active")
             return
         if node == self.sched.node:
-            # The monitor lives on the scheduler node; it cannot detect its
-            # own silence (scheduler fail-over is out of scope).
+            # The monitor lives on the scheduler node and cannot detect its
+            # own silence — killing the scheduler is the `scheduler-fault`
+            # kind's job (deputy ack-watch + peer election, control.py).
             ledger.append(seq, ev.t, ev.kind, node, "skipped-scheduler-node")
             return
         if self.sched.monitor.node_faulted(node):
@@ -619,6 +700,148 @@ class SimBackend:
         self._fault_seq[("link", (u, v))] = seq
         ledger.append(seq, ev.t, ev.kind, (u, v), "fault-injected",
                       {"loss_rate": loss})
+
+    # -- scheduler fail-over (decentralized control plane) ---------------------
+
+    def _on_scheduler_fault(self, seq: int, ev: ChurnEvent,
+                            ledger: EventLedger):
+        """The scheduler node fails silently: its monitor dies with it, the
+        cluster goes leaderless, and the deputies' ack-watch must detect
+        the silence and elect a successor (repro.core.control). The node
+        itself is handled like any silent death — streams it carried
+        stall, and the *new* leader's sweeps detect it post-election."""
+        home = self.sched.node
+        if ev.node is not None and ev.node != home:
+            # The trace thought someone else was scheduler (e.g. after an
+            # earlier fail-over already moved the home).
+            ledger.append(seq, ev.t, ev.kind, ev.node, "skipped-not-scheduler",
+                          {"home": home})
+            return
+        if self.control.leaderless or self.sched.monitor.node_faulted(home):
+            ledger.append(seq, ev.t, ev.kind, home, "skipped-duplicate-fault")
+            return
+        self._start_sweeps()
+        self.control.preferred_home = ev.new_home
+        self.control.inject_scheduler_fault()
+        self._stall_touched(node=home)
+        self._sched_fault_seq = seq
+        self._fault_seq[("node", home)] = seq
+        ledger.append(seq, ev.t, ev.kind, home, "fault-injected",
+                      {"deputies": sorted(self.control.replicas)})
+
+    def _defer_leaderless(self, seq: int, ev: ChurnEvent,
+                          ledger: EventLedger):
+        """Route an omniscient event that landed in a leaderless window.
+
+        * ``node-failure`` / ``link-failure`` — the world changed whether
+          or not anyone is in charge: convert to a pending silent fault
+          (streams stall now; the new leader's sweeps detect it later,
+          synthesizing the churn under this event's seq).
+        * ``link-degrade`` — physics too: the rate changes in place, but
+          the credit-aware re-plan is leader work and is skipped (streams
+          already scheduled keep their pre-degrade timing).
+        * everything else (join / leave / link-join / link-leave) —
+          requests that need a leader's grant: parked, re-processed at
+          install, refused terminally if the cluster freezes.
+        """
+        mon = self.sched.monitor
+        now = self.cluster.sim.now
+        if ev.kind == "node-failure":
+            node = ev.node
+            info = self.topo.nodes.get(node)
+            live = info is not None and info.state in ("active", "standby")
+            if not live or mon.node_faulted(node):
+                ledger.append(seq, ev.t, ev.kind, node, "skipped-not-active")
+                return
+            mon.inject_node_fault(node)
+            self._stall_touched(node=node)
+            self._fault_seq[("node", node)] = seq
+            ledger.append(seq, ev.t, ev.kind, node, "deferred-leaderless",
+                          {"as": "node-fault"})
+            return
+        if ev.kind == "link-failure":
+            u, v = min(ev.u, ev.v), max(ev.u, ev.v)
+            if not self.topo.has_link(u, v) or mon.link_fault_pending(u, v):
+                ledger.append(seq, ev.t, ev.kind, (u, v), "skipped-no-link")
+                return
+            mon.inject_link_fault(u, v)
+            self._stall_touched(link=(u, v))
+            self._fault_seq[("link", (u, v))] = seq
+            ledger.append(seq, ev.t, ev.kind, (u, v), "deferred-leaderless",
+                          {"as": "link-fault"})
+            return
+        if ev.kind == "link-degrade":
+            u, v = ev.u, ev.v
+            if not self.topo.has_link(u, v):
+                ledger.append(seq, ev.t, ev.kind, (u, v), "skipped-no-link")
+                return
+            link = self.topo.link(u, v)
+            if ev.bandwidth_mbps is not None:
+                link.bandwidth_mbps = max(float(ev.bandwidth_mbps),
+                                          MIN_LINK_MBPS)
+            if ev.latency_s is not None:
+                link.latency_s = float(ev.latency_s)
+            self.topo.touch()
+            ledger.append(seq, ev.t, ev.kind, (u, v), "link-degraded", {
+                "bandwidth_mbps": link.bandwidth_mbps,
+                "latency_s": link.latency_s,
+                "leaderless": True,
+            })
+            return
+        subject = ev.node if ev.node is not None else (ev.u, ev.v)
+        self._parked.append((seq, ev))
+        ledger.append(seq, ev.t, ev.kind, subject, "deferred-leaderless",
+                      {"parked_t": now})
+
+    def _failover_installed(self, result):
+        """The election completed: record it, have the new leader re-adopt
+        (or rebuild) the in-flight scale-outs, and replay parked requests."""
+        ledger = self._ledger
+        if ledger is None:
+            return  # control plane exercised outside an engine run
+        now = self.cluster.sim.now
+        seq = self._sched_fault_seq
+        ledger.append(seq, now, "scheduler-fault",
+                      (result.old_home, result.new_home), "failover", {
+                          "term": result.term,
+                          "old_home": result.old_home,
+                          "new_home": result.new_home,
+                          "fault_t": result.fault_t,
+                          "detected_t": result.detected_t,
+                          "detection_s": result.detection_s,
+                          "election_s": result.election_s,
+                          "suspicion": result.suspicion,
+                          "terms_tried": result.terms_tried,
+                          "replica_version": result.replica_version,
+                      })
+        # Re-adoption: scale-outs in the winner's replica continue
+        # untouched (delivered bytes stay credited); ones that began after
+        # its last sync are rebuilt via a credit-aware re-plan.
+        known = result.replicated_inflight
+        for fl in list(self.inflight):
+            jseq = self._inflight_seq.get(fl.new_node, -1)
+            info = self.sched.re_adopt_scale_out(
+                fl, replicated=fl.new_node in known)
+            if info is None:
+                self.inflight.remove(fl)
+                self._inflight_seq.pop(fl.new_node, None)
+                ledger.append(jseq, now, "join", fl.new_node, "aborted",
+                              {"delivered_bytes": fl.delivered_bytes()})
+                continue
+            self._stall_faulted_streams(fl)
+            action = ("re-adopted" if info["re_adoption"] == "adopted"
+                      else "replanned")
+            if action == "replanned":
+                info["plan"] = fl.plan.summary()
+            ledger.append(jseq, now, "join", fl.new_node, action, info)
+        # Parked requests get their day in court under the new leader. The
+        # replayed copy carries the install time (honest record timing);
+        # the caller's event object is never mutated — the same in-memory
+        # trace must replay byte-identically forever.
+        parked, self._parked = self._parked, []
+        for pseq, ev in parked:
+            self.handle(pseq, replace(ev, t=now), ledger)
+        self._pump(ledger)
 
     def _detection_detail(self, fault_t: Optional[float],
                           detected_t: float) -> dict:

@@ -37,6 +37,14 @@ churn elsewhere) while its data-plane per-byte time inflates by the
 reports detections through ``on_node_detected`` / ``on_link_detected``
 together with the injection time, so callers can measure fault-to-detection
 latency.
+
+Two PR-5 extensions: **probe piggybacking** (a completed bulk transfer is
+fresh probe/heartbeat evidence for its links and endpoints — the next
+redundant control datagram is skipped; ``piggyback = False`` restores
+always-probe) and **scheduler silence** (``scheduler_silent``: the home
+node died, so this monitor processes nothing until the decentralized
+control plane — ``repro.core.control`` — elects a successor and calls
+:meth:`rebase_home`).
 """
 from __future__ import annotations
 
@@ -81,6 +89,11 @@ LINK_GIVEUP_SWEEPS = 8
 LOSS_GIVEUP_SWEEPS = 32
 
 DETECTORS = ("fixed", "phi")
+
+#: heartbeat-ack datagram the scheduler sends back to its deputies — the
+#: signal the decentralized control plane (repro.core.control) watches to
+#: detect the scheduler's *own* silence (inverting the one-way heartbeat).
+ACK_BYTES = 128.0
 
 _SQRT2 = math.sqrt(2.0)
 
@@ -152,6 +165,14 @@ class ClusterMonitor:
         #: removed by other churn): (fault kind, subject tuple, fault_t).
         self.on_fault_cleared: Optional[
             Callable[[str, Tuple, float], None]] = None
+        #: home processed a heartbeat from this node — the control plane
+        #: subscribes to send the ack datagram deputies watch.
+        self.on_heartbeat_from: Optional[Callable[[int], None]] = None
+        #: the scheduler node failed silently: the monitor process living on
+        #: it is dead — it processes no heartbeats, launches no probes, and
+        #: declares nothing until a peer election installs a new home
+        #: (``rebase_home``). Node agents keep *sending* (they don't know).
+        self.scheduler_silent = False
         self._probe_failures: Dict[Tuple[int, int], int] = {}
         # Injected faults awaiting detection: subject -> injection time,
         # plus the give-up deadline the engine's drain honors.
@@ -191,6 +212,21 @@ class ClusterMonitor:
         # Heartbeat routes cached per sender, invalidated by topo.version:
         # two Dijkstras per node per sweep only when the overlay changed.
         self._route_cache: Dict[int, Tuple[int, List[List[int]]]] = {}
+        # -- probe piggybacking on data-plane traffic ----------------------
+        # A completed bulk transfer proves its links carry bytes and its
+        # endpoints are alive; the next redundant probe/heartbeat datagram
+        # is skipped and the observation counted directly.
+        self.piggyback = True
+        self._fresh_link_obs: Dict[Tuple[int, int], float] = {}
+        self._fresh_node_obs: Dict[int, float] = {}
+        self._last_probe_sweep_t = 0.0
+        self._last_hb_sweep_t = 0.0
+        #: control datagrams actually put on the wire (heartbeat copies,
+        #: probes, control-plane acks/syncs) — the piggybacking win is this
+        #: number going *down* for the same trace.
+        self.control_datagrams = 0
+        self.piggybacked_probes = 0
+        self.piggybacked_heartbeats = 0
 
     @staticmethod
     def _key(u: int, v: int) -> Tuple[int, int]:
@@ -233,6 +269,7 @@ class ClusterMonitor:
         to the last sequence sent, so stragglers can't resurrect it)."""
         self.last_heartbeat.pop(node_id, None)
         self._hb_stats.pop(node_id, None)
+        self._fresh_node_obs.pop(node_id, None)
         self._hb_delivered[node_id] = self._hb_seq.get(node_id, 0)
 
     def activate(self, node_id: int):
@@ -266,6 +303,7 @@ class ClusterMonitor:
         key = self._key(u, v)
         self._probe_failures.pop(key, None)
         self._probe_epoch[key] = self._probe_epoch.get(key, 0) + 1
+        self._fresh_link_obs.pop(key, None)  # evidence predates this life
         self._clear_link_fault(key)
 
     def _clear_link_fault(self, key: Tuple[int, int]):
@@ -430,6 +468,9 @@ class ClusterMonitor:
         self._hb_scale = 1.0
         self._probe_scale = 1.0
         self._hb_interval = self.heartbeat_period
+        self._last_probe_sweep_t = self.sim.now
+        self._last_hb_sweep_t = self.sim.now
+        self.net.on_delivery = self.note_data_delivery
         for n in self._live_nodes():
             self._prime_node(n)
         self.sim.at(self.sim.now + self.heartbeat_period,
@@ -440,7 +481,20 @@ class ClusterMonitor:
     def stop_sweeps(self):
         self.sweeps_on = False
         self.measurement_traffic = False  # bursts exist only in detected mode
+        self.net.on_delivery = None
         self._sweep_gen += 1  # any still-scheduled chain is now stale
+
+    def note_data_delivery(self, route: List[int], t: float):
+        """A bulk data-plane transfer completed along ``route``: every hop
+        demonstrably carried bytes and both endpoints demonstrably ran the
+        protocol — fresh probe evidence for the links and heartbeat
+        evidence for the endpoints, free of charge. The shard-completion
+        report the source sends the scheduler doubles as its beat."""
+        for a, b in zip(route, route[1:]):
+            self._fresh_link_obs[self._key(a, b)] = t
+        if len(route) > 1:
+            self._fresh_node_obs[route[0]] = t
+            self._fresh_node_obs[route[-1]] = t
 
     def _live_nodes(self) -> List[int]:
         return sorted(n for n, i in self.topo.nodes.items()
@@ -451,6 +505,31 @@ class ClusterMonitor:
             return self.home
         live = self._live_nodes()
         return live[0] if live else None
+
+    def rebase_home(self, new_home: int):
+        """A peer election promoted ``new_home`` to scheduler: heartbeats
+        route there from now on. Cached heartbeat routes all pointed at the
+        old home, so the cache is wiped wholesale (cheaper and safer than
+        versioning the home like the topology)."""
+        self.home = new_home
+        self.scheduler_silent = False
+        self._route_cache.clear()
+
+    def defer_node_giveup(self, node: int):
+        """Suspend the monitor-owned give-up deadline for a pending node
+        fault: while the cluster is leaderless the dead *scheduler* cannot
+        be detected by its own sweeps — the control plane owns the clock
+        (election give-up) until a new home is installed."""
+        self._giveup.pop(("node", (node,)), None)
+
+    def restore_node_giveup(self, node: int):
+        """Re-arm the give-up deadline (relative to now) for a pending node
+        fault whose detection just became possible again — the new home's
+        freshly restarted sweeps get a full window."""
+        if node in self._node_faults:
+            self._giveup[("node", (node,))] = (
+                self.sim.now
+                + NODE_GIVEUP_SWEEPS * self._max_period(self.heartbeat_period))
 
     def _sweep_alerted(self) -> bool:
         """Observed evidence of trouble: any elevated suspicion or any
@@ -473,8 +552,20 @@ class ClusterMonitor:
             return
         self.check_heartbeats()
         for n in self._live_nodes():
-            if not self.node_faulted(n):
+            if self.node_faulted(n):
+                continue
+            if (self.piggyback
+                    and self._fresh_node_obs.get(n, -1.0)
+                    >= self._last_hb_sweep_t):
+                # The node completed a data-plane transfer since the last
+                # sweep; its shard-completion report to the scheduler
+                # doubles as this sweep's beat — skip the redundant
+                # heartbeat datagram.
+                self.piggybacked_heartbeats += 1
+                self.heartbeat(n)
+            else:
                 self._send_heartbeat(n)  # healthy nodes keep beating
+        self._last_hb_sweep_t = self.sim.now
         self._hb_scale = self._next_scale(self._hb_scale)
         self._hb_interval = self.heartbeat_period * self._hb_scale
         self.sim.at(self.sim.now + self._hb_interval,
@@ -483,8 +574,13 @@ class ClusterMonitor:
     def _probe_sweep(self, gen: int):
         if not self.sweeps_on or gen != self._sweep_gen:
             return
-        for u, v in self._probe_targets():
-            self._launch_probe(u, v)
+        if not self.scheduler_silent:
+            # A dead scheduler launches no probes; the chain keeps
+            # rescheduling so probing resumes the instant a new home is
+            # installed (sweeps are restarted then anyway).
+            for u, v in self._probe_targets():
+                self._launch_probe(u, v)
+            self._last_probe_sweep_t = self.sim.now
         self._probe_scale = self._next_scale(self._probe_scale)
         self.sim.at(self.sim.now + self.probe_period * self._probe_scale,
                     lambda: self._probe_sweep(gen), daemon=True)
@@ -560,7 +656,8 @@ class ClusterMonitor:
         if home is None:
             return
         if node == home:
-            self.heartbeat(node)
+            if not self.scheduler_silent:
+                self.heartbeat(node)
             return
         routes = self._heartbeat_routes(node, home)
         if not routes:
@@ -570,6 +667,7 @@ class ClusterMonitor:
         for route in routes:
             if self._route_blackholed(route):
                 continue
+            self.control_datagrams += 1
             self.net.transfer(route, HEARTBEAT_BYTES,
                               lambda t, n=node, s=seq:
                               self._heartbeat_arrival(n, s),
@@ -579,6 +677,8 @@ class ClusterMonitor:
         """First copy of a beat counts; duplicates and late stragglers from
         older beats are dropped so redundant routes don't pollute the
         inter-arrival history with near-zero samples."""
+        if self.scheduler_silent:
+            return  # the datagram reached a dead home: nobody processes it
         if self._hb_delivered.get(node, 0) >= seq:
             return
         self._hb_delivered[node] = seq
@@ -601,6 +701,16 @@ class ClusterMonitor:
         ``loss_rate``, a blackholed link swallows it. Success is purely
         "did the transfer complete in time"."""
         key = self._key(u, v)
+        if (self.piggyback
+                and self._fresh_link_obs.get(key, -1.0)
+                >= self._last_probe_sweep_t):
+            # A bulk transfer finished on this link since the last sweep:
+            # the link demonstrably carries bytes, which is a stronger
+            # observation than a 256-byte probe — count the success and
+            # skip the redundant datagram (and its loss-RNG draw).
+            self.piggybacked_probes += 1
+            self.probe_link(u, v, ok=True)
+            return
         epoch = self._probe_epoch.get(key, 0)
         gen = self._sweep_gen
         deadline = self.sim.now + self.probe_timeout
@@ -613,6 +723,7 @@ class ClusterMonitor:
             if rate is not None:
                 dropped = (rate >= 1.0
                            or self._link_rng(key).random() < rate)
+        self.control_datagrams += 1
         if not dropped:
             self.net.transfer([u, v], PROBE_BYTES,
                               lambda t: delivered.setdefault("t", t),
@@ -635,6 +746,8 @@ class ClusterMonitor:
     def heartbeat(self, node_id: int):
         """A heartbeat from ``node_id`` arrived now: refresh the last-seen
         time and feed the inter-arrival history behind the phi score."""
+        if self.scheduler_silent:
+            return  # home's monitor process is dead: beats land on nobody
         now = self.sim.now
         st = self._hb_stats.get(node_id)
         if st is None:
@@ -642,6 +755,8 @@ class ClusterMonitor:
         else:
             st.observe(now)
             self.last_heartbeat[node_id] = now
+        if self.on_heartbeat_from is not None:
+            self.on_heartbeat_from(node_id)  # control plane acks the beat
 
     def suspicion(self, node_id: int, now: Optional[float] = None) -> float:
         """Current phi suspicion for the node (0 when unknown).
@@ -670,6 +785,8 @@ class ClusterMonitor:
         entries of nodes in any non-live state are garbage-collected — a
         node parked outside active/standby can neither beat nor be
         detected, so keeping its entry would leak it forever."""
+        if self.scheduler_silent:
+            return []  # a dead monitor declares nothing
         dead = []
         # pop (not del): a detection callback earlier in this very loop can
         # remove other nodes from the table (e.g. aborting an in-flight join
@@ -702,6 +819,8 @@ class ClusterMonitor:
     # -- link probes -------------------------------------------------------------
 
     def probe_link(self, u: int, v: int, ok: bool = True):
+        if self.scheduler_silent:
+            return False  # judgments belong to the (dead) monitor process
         key = self._key(u, v)
         if ok:
             self._probe_failures.pop(key, None)

@@ -159,6 +159,61 @@ class ChaosScheduler:
         # replan-everything-undelivered behavior (benchmark baseline).
         self.partial_credit = True
 
+    # -- control-plane replication / fail-over (repro.core.control) ------------
+
+    def control_state(self) -> dict:
+        """The scheduler state a deputy needs besides the in-flight ledger
+        (which the engine backend contributes): versions, live membership
+        (the election quorum denominator), and the pending-fault table —
+        everything JSON-ish and deterministic."""
+        mon = self.monitor
+        return {
+            "topo_version": self.topo.version,
+            "sync_policy_version": self.sync_policy_version,
+            "membership": tuple(sorted(self.topo.active_nodes())),
+            "pending_faults": (
+                tuple(("node", n) for n in sorted(mon._node_faults))
+                + tuple(("link", k) for k in sorted(mon._link_faults))),
+        }
+
+    def handover(self, new_home: int):
+        """A peer election promoted ``new_home``: the scheduler identity
+        moves there, heartbeats re-route (cached routes invalidated), and
+        the new leader regenerates the sync policy it now owns."""
+        self.node = new_home
+        self.monitor.rebase_home(new_home)
+        self._update_sync_policy()
+
+    def re_adopt_scale_out(self, fl: "InflightScaleOut",
+                           *, replicated: bool) -> Optional[dict]:
+        """The elected leader takes ownership of an in-flight replication
+        after fail-over.
+
+        ``replicated`` — the scale-out was in the winner's deputy replica:
+        adopt it in place. Streams keep flowing (they never depended on the
+        dead leader) and every delivered byte stays credited; only the
+        finalization, which needs a live leader, was waiting. Otherwise the
+        scale-out began after the winner's last sync: the new leader has no
+        record of it and must rebuild the plan — ``replan_scale_out``
+        re-plans the missing bytes, crediting the delivered prefix the
+        joining node itself reports (§IV-C delta recovery — the bytes live
+        on the joiner, not in the dead leader's memory).
+
+        Returns the adoption accounting for the ledger, or None when the
+        rebuild found no surviving neighbors and aborted."""
+        # Finalization could not have happened during the leaderless
+        # window: a replication that drained then is complete at install
+        # time, not before (the ready record must postdate the election).
+        fl.t_last_credit = max(fl.t_last_credit, self.sim.now)
+        if not replicated and not self.replan_scale_out(fl):
+            return None
+        return {
+            "re_adoption": "adopted" if replicated else "rebuilt",
+            "delivered_bytes": fl.delivered_bytes(),
+            "credited_bytes": fl.credited_bytes(),
+            "replans": fl.replans,
+        }
+
     # -- helpers ---------------------------------------------------------------
 
     def _control_rtt(self, u: int, v: int) -> float:

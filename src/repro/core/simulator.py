@@ -162,6 +162,11 @@ class Network:
         self._link_loss: Dict[Tuple[int, int], float] = {}
         self.bytes_on_wire = 0.0
         self.control_messages = 0
+        #: completed *bulk* deliveries are reported here as (route, t) — the
+        #: cluster monitor subscribes to piggyback probe/heartbeat evidence
+        #: on data-plane traffic (a finished transfer proves its links and
+        #: endpoints work; the next redundant control datagram is skipped).
+        self.on_delivery: Optional[Callable[[List[int], float], None]] = None
 
     def _key(self, u, v):
         return (min(u, v), max(u, v))
@@ -246,6 +251,10 @@ class Network:
                 return
             handle.done_t = t
             on_done(t)
+            if contend and self.on_delivery is not None:
+                # Control datagrams (contend=False) never count as evidence
+                # for piggybacking — they ARE the traffic being saved.
+                self.on_delivery(route, t)
 
         self.sim.at(t, deliver, daemon=daemon)
         return handle

@@ -337,6 +337,11 @@ class TrainerBackend:
         self._node_device: Dict[int, object] = {}  # trace node id -> device
         self._departed: set = set()  # trace nodes that already left/failed
         self._link_faulted: set = set()  # trace links with an applied fault
+        #: device standing in for the scheduler/coordinator (defaults to
+        #: the lowest-id active device — the simulator's home convention);
+        #: a replayed ``scheduler-fault`` moves this, keeping one trace
+        #: file runnable on both substrates.
+        self._coordinator = None
 
     # -- engine protocol -----------------------------------------------------
 
@@ -346,8 +351,54 @@ class TrainerBackend:
         for _ in range(self.steps_between):
             self.trainer.step(self.batch_fn())
 
+    def coordinator_device(self):
+        """The device currently playing scheduler: the explicitly installed
+        one while it remains active, else the lowest-id active device."""
+        tr = self.trainer
+        if self._coordinator is not None and self._coordinator in tr.active:
+            return self._coordinator
+        return min(tr.active, key=lambda d: d.id) if tr.active else None
+
     def handle(self, seq: int, ev: ChurnEvent, ledger: EventLedger):
         tr = self.trainer
+        if ev.kind == "scheduler-fault":
+            # Coordinator swap, trainer-side: no virtual clock to elect on,
+            # so the fail-over resolves at the event boundary — the dead
+            # coordinator's device is shed (it failed silently) and the
+            # deterministic successor (trace preference first, else lowest
+            # remaining device id) takes the role. Training state survives
+            # on the replicas; the next step recompiles at most.
+            old = self.coordinator_device()
+            if ev.node is not None and (old is None
+                                        or self._device_for(ev.node)
+                                        is not old):
+                # Mirror SimBackend: a fault naming a non-current home
+                # (e.g. re-killing the original scheduler after an earlier
+                # fail-over moved the role) is skipped on both substrates.
+                ledger.append(seq, ev.t, ev.kind, ev.node,
+                              "skipped-not-scheduler",
+                              {"home": old.id if old else None})
+                return
+            cands = sorted((d for d in tr.active if d is not old),
+                           key=lambda d: d.id)
+            if old is None or not cands:
+                ledger.append(seq, ev.t, ev.kind, ev.node,
+                              "skipped-no-deputy")
+                return
+            preferred = self._device_for(ev.new_home)
+            new = (preferred if preferred is not None and preferred in cands
+                   else cands[0])
+            shed = False
+            if len(tr.active) > self.min_active:
+                sev = tr.scale_in(old, failure=True)
+                self.results[seq] = sev
+                shed = True
+            self._coordinator = new
+            ledger.append(seq, ev.t, ev.kind, (old.id, new.id), "failover", {
+                "old_home": old.id, "new_home": new.id, "shed": shed,
+                "n_active": len(tr.active), "detected": True,
+            })
+            return
         if ev.kind == "join":
             free = [d for d in tr.pool if d not in tr.active]
             if not free:

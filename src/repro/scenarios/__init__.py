@@ -10,6 +10,7 @@ from repro.scenarios.generators import (
     link_flaps,
     poisson_churn,
     regional_partition,
+    scheduler_churn,
     silent_failures,
 )
 
@@ -25,4 +26,5 @@ __all__ = [
     "bandwidth_degradation",
     "silent_failures",
     "detector_stress",
+    "scheduler_churn",
 ]

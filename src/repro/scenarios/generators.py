@@ -33,6 +33,10 @@ Catalog:
   blackhole flaps (``link-fault`` then a restoring ``link-join``), silent
   node faults, and concurrent joins generating data-plane traffic that
   congests the very paths heartbeats and probes ride.
+* ``scheduler_churn``    — the scheduler node itself fails silently
+  (``scheduler-fault``) mid-scale-out: deputies must detect the missing
+  heartbeat acks, elect a successor, re-adopt the in-flight replications
+  from the replicated ledger, and serve the joins that arrived leaderless.
 """
 from __future__ import annotations
 
@@ -485,6 +489,60 @@ def detector_stress(
                          })
 
 
+def scheduler_churn(
+    topo: Topology, *, seed: int, horizon_s: float,
+    t_fault: Optional[float] = None, n_joins_before: int = 1,
+    n_joins_after: int = 1, lead_s: float = 5.0, max_links: int = 3,
+    new_home: Optional[int] = None,
+    bw_range=DEFAULT_BW_RANGE, lat_range=DEFAULT_LAT_RANGE,
+    compute_range=DEFAULT_COMPUTE_RANGE,
+) -> ScenarioTrace:
+    """The control plane's own failure mode: the scheduler node dies
+    silently mid-scale-out.
+
+    ``n_joins_before`` joins land within ``lead_s`` of the fault, so their
+    replications are still on the wire when the scheduler goes dark at
+    ``t_fault`` (default: 40% into the horizon) — the stress case for
+    deputy re-adoption: scale-outs synced to the deputies before the fault
+    are re-adopted with their delivered bytes credited, ones that began
+    inside the last sync window are rebuilt. ``n_joins_after`` more joins
+    arrive during/after the leaderless window: they park until the peer
+    election installs a successor and must complete under the new leader
+    (the acceptance check for fail-over actually working). ``new_home``
+    optionally pins the preferred successor (honored when it is a live
+    deputy). Joins bring at least two links so losing the old scheduler as
+    a source forces a re-plan, not an abort."""
+    rng = random.Random(seed)
+    nodes = sorted(topo.active_nodes())
+    home = min(nodes) if nodes else None
+    if t_fault is None:
+        t_fault = 0.4 * horizon_s
+    events: List[ChurnEvent] = []
+    m = _Membership(nodes, rng)
+    for _ in range(n_joins_before):
+        t = t_fault - rng.uniform(0.3, max(lead_s, 0.4))
+        events.append(_join_event(max(t, 0.0), m, rng, max_links=max_links,
+                                  min_links=2, bw_range=bw_range,
+                                  lat_range=lat_range,
+                                  compute_range=compute_range))
+    events.append(ChurnEvent(t=t_fault, kind="scheduler-fault", node=home,
+                             new_home=new_home))
+    span = max(horizon_s - t_fault, 1.0)
+    for _ in range(n_joins_after):
+        t = t_fault + rng.uniform(0.1 * span, span)
+        events.append(_join_event(t, m, rng, max_links=max_links,
+                                  min_links=2, bw_range=bw_range,
+                                  lat_range=lat_range,
+                                  compute_range=compute_range))
+    return ScenarioTrace("scheduler-churn", seed,
+                         sorted(events, key=lambda e: e.t), {
+                             "home": home, "t_fault": t_fault,
+                             "n_joins_before": n_joins_before,
+                             "n_joins_after": n_joins_after,
+                             "horizon_s": horizon_s,
+                         })
+
+
 GENERATORS = {
     "poisson-churn": poisson_churn,
     "diurnal-waves": diurnal_waves,
@@ -495,4 +553,5 @@ GENERATORS = {
     "bandwidth-degradation": bandwidth_degradation,
     "silent-failures": silent_failures,
     "detector-stress": detector_stress,
+    "scheduler-churn": scheduler_churn,
 }

@@ -374,12 +374,34 @@ def test_json_roundtrip_every_event_kind():
         ChurnEvent(t=8.0, kind="node-fault", node=7),
         ChurnEvent(t=9.0, kind="link-fault", u=0, v=3),
         ChurnEvent(t=10.0, kind="link-loss", u=0, v=5, loss_rate=0.35),
+        # Election-ledger fields: term/new_home/election_s must survive the
+        # wire (a recorded fail-over normalized back into a trace), and a
+        # zero election_s is a value, not a request for the default.
+        ChurnEvent(t=11.0, kind="scheduler-fault", node=0,
+                   term=3, new_home=4, election_s=0.0),
     ]
     from repro.core.engine import EVENT_KINDS
     assert {e.kind for e in events} == set(EVENT_KINDS)
     for e in events:
         wire = json.loads(json.dumps(e.to_json()))
         assert ChurnEvent.from_json(wire) == e, e.kind
+
+
+def test_scheduler_fault_minimal_and_full_roundtrip():
+    """The bare scheduler-fault (no successor preference) and the fully
+    annotated one both round-trip losslessly; absent election fields stay
+    absent on the wire."""
+    bare = ChurnEvent(t=2.0, kind="scheduler-fault")
+    d = bare.to_json()
+    assert set(d) == {"t", "kind"}
+    assert ChurnEvent.from_json(json.loads(json.dumps(d))) == bare
+    full = ChurnEvent(t=2.0, kind="scheduler-fault", node=1,
+                      term=7, new_home=2, election_s=0.125)
+    wire = json.loads(json.dumps(full.to_json()))
+    back = ChurnEvent.from_json(wire)
+    assert back == full
+    assert back.term == 7 and back.new_home == 2
+    assert back.election_s == 0.125
 
 
 def test_empty_links_keeps_compute_s():

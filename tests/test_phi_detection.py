@@ -382,6 +382,62 @@ def test_inject_then_clear_restores_clean_goodput():
 
 
 # ---------------------------------------------------------------------------
+# Satellite: probe piggybacking on data-plane traffic.
+# ---------------------------------------------------------------------------
+
+
+def test_probe_piggybacking_reduces_control_datagrams():
+    """A completed data-plane transfer counts as a fresh probe/heartbeat
+    observation for its links and endpoints: the next redundant control
+    datagram is skipped, so the same trace costs measurably fewer
+    datagrams with piggybacking on — and the join still completes."""
+
+    def run(piggyback):
+        cl = _cluster(state=64 * MB)
+        cl.train(1)
+        mon = cl.scheduler.monitor
+        mon.piggyback = piggyback
+        u, v = [e for e in sorted(cl.topo.g.edges)
+                if cl.scheduler.node not in e][0]
+        t0 = cl.sim.now
+        events = [
+            # Starts the sweeps; loss_rate=0 injects nothing observable.
+            ChurnEvent(t=t0 + 0.1, kind="link-loss", u=u, v=v,
+                       loss_rate=0.0),
+            # Replication bytes on the wire = piggyback evidence.
+            ChurnEvent(t=t0 + 0.5, kind="join", node=100,
+                       links={1: (200.0, 0.01), 2: (300.0, 0.01)}),
+        ]
+        ledger, _ = run_trace_sim(cl, events)
+        return mon, ledger
+
+    mon_off, ledger_off = run(False)
+    mon_on, ledger_on = run(True)
+    assert mon_off.piggybacked_probes == 0
+    assert mon_off.piggybacked_heartbeats == 0
+    skipped = (mon_on.piggybacked_probes + mon_on.piggybacked_heartbeats)
+    assert skipped > 0
+    assert mon_on.control_datagrams < mon_off.control_datagrams
+    assert "ready" in ledger_on.actions()
+    assert "ready" in ledger_off.actions()
+
+
+def test_piggyback_evidence_does_not_mask_blackholed_link():
+    """A blackholed link never completes a transfer, so piggybacking can
+    never suppress the probes that detect it — the fault is still found."""
+    cl = _cluster()
+    cl.train(1)
+    u, v = [e for e in sorted(cl.topo.g.edges)
+            if cl.scheduler.node not in e][0]
+    assert cl.scheduler.monitor.piggyback  # default on
+    ledger, _ = run_trace_sim(cl, [
+        ChurnEvent(t=cl.sim.now + 0.5, kind="link-fault", u=u, v=v)])
+    recs = [r for r in ledger if r.action == "link-failed"
+            and tuple(r.subject) == (min(u, v), max(u, v))]
+    assert recs, ledger.actions()
+
+
+# ---------------------------------------------------------------------------
 # Satellite: stale heartbeat entries of non-live nodes are GC'd.
 # ---------------------------------------------------------------------------
 
