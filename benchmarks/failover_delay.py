@@ -50,9 +50,13 @@ def restart_baseline_s(state_bytes: int) -> float:
 
 def measure_failover(n_nodes: int, state_bytes: int, tensor_sizes, *,
                      seed: int = 0, n_joins_before: int = 1,
-                     n_joins_after: int = 1, train_iters: int = 1):
+                     n_joins_after: int = 1, train_iters: int = 1,
+                     codec: str = "none"):
     """Replay a scheduler_churn trace and pull the fail-over timeline off
-    the ledger. Returns the per-phase decomposition plus the raw ledger."""
+    the ledger. Returns the per-phase decomposition plus the raw ledger;
+    ``codec`` selects the replication wire codec (deputy sync snapshots
+    compress with it too), and the returned wire-byte counters are deltas
+    across the replay for the codec A/B."""
     topo = random_edge_topology(n_nodes, seed=seed)
     cl = make_cluster(topo, state_bytes=state_bytes,
                       tensor_sizes=tensor_sizes, strategy="chaos")
@@ -62,7 +66,8 @@ def measure_failover(n_nodes: int, state_bytes: int, tensor_sizes, *,
                             t_fault=t0 + 8.0,
                             n_joins_before=n_joins_before,
                             n_joins_after=n_joins_after)
-    ledger, results = run_trace_sim(cl, trace)
+    w0, c0 = cl.net.data_wire_bytes, cl.net.control_wire_bytes
+    ledger, results = run_trace_sim(cl, trace, codec=codec)
     fault = [r for r in ledger
              if r.kind == "scheduler-fault" and r.action == "fault-injected"]
     failover = [r for r in ledger if r.action == "failover"]
@@ -77,6 +82,10 @@ def measure_failover(n_nodes: int, state_bytes: int, tensor_sizes, *,
         "rebuilt": sum(1 for r in ledger if r.action == "replanned"
                        and r.detail.get("re_adoption") == "rebuilt"),
         "post_election_ready": 0,
+        "data_wire_bytes": cl.net.data_wire_bytes - w0,
+        "control_wire_bytes": cl.net.control_wire_bytes - c0,
+        "repl_wire_bytes": cl.scheduler.replication_wire_bytes,
+        "repl_payload_bytes": cl.scheduler.replication_payload_bytes,
         "ledger": ledger,
     }
     if not (fault and failover):
@@ -158,6 +167,19 @@ def _smoke() -> int:
 
 
 def main():
+    if "--codec" in sys.argv[1:]:
+        from benchmarks.replication_codec import (
+            FAILOVER_COLS,
+            failover_codec_smoke,
+            run_failover_ab,
+            write_bench,
+        )
+        if "--smoke" in sys.argv[1:]:
+            return failover_codec_smoke()
+        rows = run_failover_ab()
+        print_csv("Fail-over codec A/B", rows, FAILOVER_COLS)
+        write_bench("failover", rows)
+        return 0
     if "--smoke" in sys.argv[1:]:
         return _smoke()
     rows = run()

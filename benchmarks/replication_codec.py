@@ -1,0 +1,223 @@
+"""Codec A/B — bytes on the wire with the shard codec fused into the
+replication transfer path (docs/architecture.md §"Bytes on the wire").
+
+Two experiments, both replayed through the unified churn engine:
+
+* **scaleout**: the Fig-7 join, once per codec policy. ``none`` must be
+  byte-identical to the pre-codec engine (same ledger bytes as a run that
+  never mentions a codec); ``int8`` must cut replication wire bytes ≥3×
+  (the framing floor is 128/32.5 ≈ 3.94×) *and* show it in the join delay.
+* **failover**: the scheduler_churn trace per codec — deputy sync
+  snapshots ride the codec too, so control-plane sync wire bytes drop
+  alongside the re-adopted replication payloads.
+
+Results merge into ``BENCH_replication_codec.json`` at the repo root
+(sections ``"scaleout"`` / ``"failover"``). ``--smoke`` asserts the
+acceptance bar; ``benchmarks.run`` executes the full A/B.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import (
+    MiB,
+    join_links,
+    print_csv,
+    tensor_sizes_for,
+)
+from repro.core.baselines import make_cluster
+from repro.core.engine import ChurnEvent, run_trace_sim
+from repro.core.topology import random_edge_topology
+
+CODECS = ("none", "int8", "int8+topk")
+BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_replication_codec.json"
+
+SMOKE_MODEL = ("resnet101-smoke", 16 * MiB, 1 * MiB)
+FULL_MODELS = [
+    ("resnet101", 178 * MiB, 2 * MiB),
+    ("gpt2", 468 * MiB, 4 * MiB),
+]
+
+
+def write_bench(section: str, payload) -> None:
+    """Merge one section into BENCH_replication_codec.json (repo root)."""
+    data = {}
+    if BENCH_PATH.exists():
+        try:
+            data = json.loads(BENCH_PATH.read_text())
+        except (ValueError, OSError):
+            data = {}
+    data[section] = payload
+    BENCH_PATH.write_text(json.dumps(data, indent=1))
+
+
+def measure_codec_scale_out(n_nodes: int, state_bytes: int, tensor_sizes, *,
+                            codec=None, seed: int = 0, train_iters: int = 1):
+    """One join through the engine under a codec policy (``None`` = run the
+    engine without ever mentioning a codec — the byte-identity reference).
+    Wire bytes are measured as the network counter delta across the replay,
+    so pre-join training traffic doesn't dilute the A/B."""
+    topo = random_edge_topology(n_nodes, seed=seed)
+    cl = make_cluster(topo, state_bytes=state_bytes,
+                      tensor_sizes=tensor_sizes, strategy="chaos")
+    cl.train(train_iters)
+    new = 1000 + seed
+    links = join_links(topo, new, 3, seed + 7)
+    ev = ChurnEvent(t=cl.sim.now, kind="join", node=new,
+                    links={p: (l.bandwidth_mbps, l.latency_s)
+                           for p, l in links.items()})
+    w0, c0 = cl.net.data_wire_bytes, cl.net.control_wire_bytes
+    kw = {} if codec is None else {"codec": codec}
+    ledger, results = run_trace_sim(cl, [ev], **kw)
+    res = results.get(0)
+    return {
+        "delay_s": res.delay_s if res is not None else float("nan"),
+        "data_wire_bytes": cl.net.data_wire_bytes - w0,
+        "control_wire_bytes": cl.net.control_wire_bytes - c0,
+        "repl_wire_bytes": cl.scheduler.replication_wire_bytes,
+        "repl_payload_bytes": cl.scheduler.replication_payload_bytes,
+        "ledger": ledger,
+    }
+
+
+def run_scaleout_ab(smoke: bool = False, repeats: int = 3):
+    models = [SMOKE_MODEL] if smoke else FULL_MODELS
+    repeats = 1 if smoke else repeats
+    rows = []
+    for model, state, typ in models:
+        sizes = tensor_sizes_for(state, typ)
+        base = None
+        for codec in CODECS:
+            rs = [measure_codec_scale_out(8, state, sizes, codec=codec,
+                                          seed=r)
+                  for r in range(repeats)]
+            delay = float(np.mean([r["delay_s"] for r in rs]))
+            wire = float(np.mean([r["repl_wire_bytes"] for r in rs]))
+            if codec == "none":
+                base = (delay, wire)
+            rows.append({
+                "model": model, "codec": codec,
+                "delay_s": round(delay, 3),
+                "wire_MiB": round(wire / MiB, 2),
+                "wire_reduction": round(base[1] / wire, 2) if wire else 0.0,
+                "speedup": round(base[0] / delay, 2) if delay else 0.0,
+            })
+    return rows
+
+
+def measure_codec_failover(state_bytes: int, tensor_sizes, *,
+                           codec: str = "none", seed: int = 0):
+    from benchmarks.failover_delay import measure_failover
+    return measure_failover(8, state_bytes, tensor_sizes, seed=seed,
+                            n_joins_before=2, codec=codec)
+
+
+def run_failover_ab(smoke: bool = False, repeats: int = 2):
+    model, state, typ = SMOKE_MODEL if smoke else FULL_MODELS[0]
+    sizes = tensor_sizes_for(state, typ)
+    repeats = 1 if smoke else repeats
+    rows = []
+    base = None
+    for codec in ("none", "int8"):
+        rs = [measure_codec_failover(state, sizes, codec=codec, seed=r)
+              for r in range(repeats)]
+        failover = float(np.mean([r["failover_s"] for r in rs]))
+        repl_w = float(np.mean([r["repl_wire_bytes"] for r in rs]))
+        ctrl_w = float(np.mean([r["control_wire_bytes"] for r in rs]))
+        if codec == "none":
+            base = (repl_w, ctrl_w)
+        rows.append({
+            "model": model, "codec": codec,
+            "failover_s": round(failover, 3),
+            "repl_wire_MiB": round(repl_w / MiB, 2),
+            "control_wire_KiB": round(ctrl_w / 1024, 1),
+            "repl_wire_reduction": round(base[0] / repl_w, 2) if repl_w else 0.0,
+            "control_wire_saved_KiB": round((base[1] - ctrl_w) / 1024, 1),
+        })
+    return rows
+
+
+SCALEOUT_COLS = ["model", "codec", "delay_s", "wire_MiB", "wire_reduction",
+                 "speedup"]
+FAILOVER_COLS = ["model", "codec", "failover_s", "repl_wire_MiB",
+                 "control_wire_KiB", "repl_wire_reduction",
+                 "control_wire_saved_KiB"]
+
+
+def scaleout_codec_smoke() -> int:
+    """CI bar: codec="none" byte-identical to the codec-less engine;
+    int8 ≥3× fewer wire bytes, faster join, same-seed deterministic."""
+    rows = run_scaleout_ab(smoke=True)
+    print_csv("Scale-out codec A/B", rows, SCALEOUT_COLS)
+    write_bench("scaleout", rows)
+    model, state, typ = SMOKE_MODEL
+    sizes = tensor_sizes_for(state, typ)
+    default = measure_codec_scale_out(8, state, sizes, codec=None, seed=0)
+    none = measure_codec_scale_out(8, state, sizes, codec="none", seed=0)
+    i1 = measure_codec_scale_out(8, state, sizes, codec="int8", seed=0)
+    i2 = measure_codec_scale_out(8, state, sizes, codec="int8", seed=0)
+    none_identical = (none["ledger"].canonical_bytes()
+                      == default["ledger"].canonical_bytes())
+    int8_identical = (i1["ledger"].canonical_bytes()
+                      == i2["ledger"].canonical_bytes())
+    by = {r["codec"]: r for r in rows}
+    reduction_ok = by["int8"]["wire_reduction"] >= 3.0
+    faster = by["int8"]["delay_s"] < by["none"]["delay_s"]
+    ok = none_identical and int8_identical and reduction_ok and faster
+    print(f"derived: codec_none_ledger_identical_to_default={none_identical}")
+    print(f"derived: same_seed_int8_ledgers_identical={int8_identical}")
+    print(f"derived: int8_wire_reduction={by['int8']['wire_reduction']}"
+          f" (>=3.0: {reduction_ok})")
+    print(f"derived: int8_faster_than_none={faster}")
+    print("SMOKE_OK" if ok else "SMOKE_FAILED")
+    return 0 if ok else 1
+
+
+def failover_codec_smoke() -> int:
+    """CI bar: fail-over still completes under int8, re-adopted replication
+    wire bytes drop ≥3×, deputy sync control bytes shrink, same-seed
+    deterministic."""
+    rows = run_failover_ab(smoke=True)
+    print_csv("Fail-over codec A/B", rows, FAILOVER_COLS)
+    write_bench("failover", rows)
+    model, state, typ = SMOKE_MODEL
+    sizes = tensor_sizes_for(state, typ)
+    d1 = measure_codec_failover(state, sizes, codec="int8", seed=0)
+    d2 = measure_codec_failover(state, sizes, codec="int8", seed=0)
+    identical = (d1["ledger"].canonical_bytes()
+                 == d2["ledger"].canonical_bytes())
+    by = {r["codec"]: r for r in rows}
+    completes = np.isfinite(by["int8"]["failover_s"])
+    reduction_ok = by["int8"]["repl_wire_reduction"] >= 3.0
+    ctrl_ok = by["int8"]["control_wire_saved_KiB"] > 0.0
+    ok = completes and reduction_ok and ctrl_ok and identical
+    print(f"derived: int8_failover_completes={completes}")
+    print(f"derived: int8_repl_wire_reduction="
+          f"{by['int8']['repl_wire_reduction']} (>=3.0: {reduction_ok})")
+    print(f"derived: control_sync_bytes_reduced={ctrl_ok}")
+    print(f"derived: same_seed_int8_failover_ledgers_identical={identical}")
+    print("SMOKE_OK" if ok else "SMOKE_FAILED")
+    return 0 if ok else 1
+
+
+def main():
+    smoke = "--smoke" in sys.argv[1:]
+    if smoke:
+        rc = scaleout_codec_smoke()
+        rc |= failover_codec_smoke()
+        return rc
+    rows = run_scaleout_ab()
+    print_csv("Scale-out codec A/B", rows, SCALEOUT_COLS)
+    write_bench("scaleout", rows)
+    fo = run_failover_ab()
+    print_csv("Fail-over codec A/B", fo, FAILOVER_COLS)
+    write_bench("failover", fo)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,6 +10,12 @@ stop-resume closed-form model.
 fastest shard stream is severed mid-replication and the delay is compared
 with partial-transfer credit (delivered shards kept) vs the pre-credit
 forfeit-everything replan — the engine lever that shrinks recovery time.
+``--codec`` A/Bs the replication wire codec (none / int8 / int8+topk):
+per-codec join delay and bytes-on-the-wire, merged into
+``BENCH_replication_codec.json`` at the repo root; with ``--smoke`` it
+asserts the codec acceptance bar (``none`` byte-identical to the
+codec-less engine, int8 ≥3× fewer wire bytes and a faster join,
+same-seed determinism) — see ``benchmarks/replication_codec.py``.
 ``--detected`` A/Bs omniscient vs detection-driven failure handling: the
 same mid-replication source failure once as a trace-injected
 ``node-failure`` (the engine reacts instantly — the pre-detection
@@ -204,6 +210,19 @@ def _detected_smoke() -> int:
 
 def main():
     smoke = "--smoke" in sys.argv[1:]
+    if "--codec" in sys.argv[1:]:
+        from benchmarks.replication_codec import (
+            SCALEOUT_COLS,
+            run_scaleout_ab,
+            scaleout_codec_smoke,
+            write_bench,
+        )
+        if smoke:
+            return scaleout_codec_smoke()
+        rows = run_scaleout_ab()
+        print_csv("Scale-out codec A/B", rows, SCALEOUT_COLS)
+        write_bench("scaleout", rows)
+        return 0
     if "--detected" in sys.argv[1:]:
         if smoke:
             return _detected_smoke()

@@ -11,6 +11,13 @@ from repro.core.sharding_alg import (
     greedy_shard_assignment,
     greedy_shard_assignment_vec,
 )
+from repro.core.codec import (
+    CODEC_INT8,
+    CODEC_INT8_TOPK,
+    CODEC_NONE,
+    negotiate,
+    wire_bytes,
+)
 from repro.core.plans import (
     ReplicationPlan,
     build_plan,
@@ -38,6 +45,11 @@ from repro.core.replication import (
 )
 
 __all__ = [
+    "CODEC_INT8",
+    "CODEC_INT8_TOPK",
+    "CODEC_NONE",
+    "negotiate",
+    "wire_bytes",
     "Assignment",
     "NeighborLink",
     "auto_greedy_solver",

@@ -49,13 +49,16 @@ STRATEGIES = ("chaos", "chaos-even", "single-source", "multi-source", "pollux")
 
 
 def make_cluster(topo: Topology, *, state_bytes: int,
-                 tensor_sizes: Sequence[int], strategy: str) -> SimCluster:
+                 tensor_sizes: Sequence[int], strategy: str,
+                 codec: str = "none") -> SimCluster:
     if strategy == "pollux":
         # Pollux still trains synchronously; scale events handled separately.
         return SimCluster(topo, state_bytes=state_bytes,
-                          tensor_sizes=tensor_sizes, strategy="single-source")
+                          tensor_sizes=tensor_sizes, strategy="single-source",
+                          codec=codec)
     return SimCluster(topo, state_bytes=state_bytes,
-                      tensor_sizes=tensor_sizes, strategy=strategy)
+                      tensor_sizes=tensor_sizes, strategy=strategy,
+                      codec=codec)
 
 
 def run_scale_out(cluster: SimCluster, strategy: str, new_node: int,

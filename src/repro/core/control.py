@@ -62,6 +62,7 @@ from repro.core.monitor import (
     _ArrivalStats,
     phi_score,
 )
+from repro.core import codec as wire_codec
 from repro.core.simulator import Network, Sim
 from repro.core.topology import Topology
 
@@ -181,6 +182,10 @@ class ControlPlane:
             lambda: [])
         self.sync_datagrams = 0
         self.ack_datagrams = 0
+        #: cumulative wire bytes of deputy sync payloads (codec-compressed
+        #: when the scheduler runs a non-``none`` codec policy; acks stay
+        #: raw — too small for framing to pay off).
+        self.sync_wire_bytes = 0.0
         self._ack_seq: Dict[int, int] = {}  # per-deputy ack sequence sent
         self._ack_delivered: Dict[int, int] = {}  # highest sequence received
         #: terms consumed since the current scheduler fault was injected —
@@ -311,6 +316,16 @@ class ControlPlane:
             sent += 1
         return sent
 
+    def _sync_payload_bytes(self) -> float:
+        """Wire bytes of one deputy sync datagram. Under a non-``none``
+        scheduler codec policy the snapshot ships int8-encoded (control
+        state has no top-k structure — quantization only); under ``none``
+        this is exactly ``SYNC_BYTES``, keeping ledgers byte-identical."""
+        policy = getattr(self.scheduler, "codec", wire_codec.CODEC_NONE)
+        if policy == wire_codec.CODEC_NONE:
+            return SYNC_BYTES
+        return float(wire_codec.wire_bytes(wire_codec.CODEC_INT8, SYNC_BYTES))
+
     def _sync_sweep(self, gen: int):
         if not self.started or gen != self._gen:
             return
@@ -319,10 +334,13 @@ class ControlPlane:
             # sync resumes under the next leader.
             snap = self.snapshot()
             self._refresh_deputies(snap=snap)
+            payload = self._sync_payload_bytes()
             for node, replica in sorted(self.replicas.items()):
-                self.sync_datagrams += self._send_control(
-                    node, SYNC_BYTES,
+                sent = self._send_control(
+                    node, payload,
                     lambda t, r=replica, s=snap: r.observe_sync(s, t))
+                self.sync_datagrams += sent
+                self.sync_wire_bytes += sent * payload
         self.sim.at(self.sim.now + self.monitor.heartbeat_period,
                     lambda: self._sync_sweep(gen), daemon=True)
 

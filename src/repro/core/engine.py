@@ -45,6 +45,7 @@ import json
 from dataclasses import dataclass, field, replace
 from typing import Dict, Iterable, List, Optional, Tuple
 
+from repro.core import codec as wire_codec
 from repro.core.control import ControlPlane
 from repro.core.negotiation import InflightScaleOut, SimCluster
 from repro.core.topology import Link
@@ -84,6 +85,10 @@ class ChurnEvent:
     term: Optional[int] = None
     new_home: Optional[int] = None
     election_s: Optional[float] = None
+    #: join-only codec policy override ("none"/"int8"/"int8+topk"/"auto",
+    #: repro.core.codec): this join's replication runs under the given
+    #: policy instead of the backend's standing one. None = backend default.
+    codec: Optional[str] = None
 
     def __post_init__(self):
         if self.kind not in EVENT_KINDS:
@@ -113,6 +118,8 @@ class ChurnEvent:
             out["new_home"] = self.new_home
         if self.election_s is not None:
             out["election_s"] = self.election_s
+        if self.codec is not None:
+            out["codec"] = self.codec
         return out
 
     @classmethod
@@ -127,7 +134,7 @@ class ChurnEvent:
                    latency_s=d.get("latency_s"),
                    loss_rate=d.get("loss_rate"),
                    term=d.get("term"), new_home=d.get("new_home"),
-                   election_s=d.get("election_s"))
+                   election_s=d.get("election_s"), codec=d.get("codec"))
 
     def link_objects(self) -> Dict[int, Link]:
         return {p: Link(bw, lat) for p, (bw, lat) in (self.links or {}).items()}
@@ -237,9 +244,14 @@ class SimBackend:
     def __init__(self, cluster: SimCluster, *, min_active: int = 2,
                  solver_charge_s=DEFAULT_SOLVER_CHARGE_S,
                  partial_credit: bool = True, detection_seed: int = 0,
-                 detector: str = "phi"):
+                 detector: str = "phi",
+                 codec: str = wire_codec.CODEC_NONE):
         self.cluster = cluster
         self.min_active = min_active
+        # Standing codec policy for state-bearing transfers; per-join trace
+        # events may override it (ChurnEvent.codec). "none" replays every
+        # pre-codec trace byte-identically.
+        cluster.scheduler.codec = wire_codec.validate_policy(codec)
         self.inflight: List[InflightScaleOut] = []
         self._inflight_seq: Dict[int, int] = {}  # new_node -> event seq
         self.results: Dict[int, object] = {}
@@ -394,14 +406,20 @@ class SimBackend:
                 res = self.sched.finish_scale_out(fl)
                 seq = self._inflight_seq.pop(fl.new_node, -1)
                 self.results[seq] = res
+                detail = {
+                    "delay_s": res.delay_s,
+                    "replication_s": res.replication_s,
+                    "replans": res.replans,
+                    "credited_bytes": fl.credited_bytes(),
+                    "plan": fl.plan.summary(),
+                }
+                # Wire accounting only under an active codec: "none" ledgers
+                # must stay byte-identical to the pre-codec format.
+                if fl.codec != wire_codec.CODEC_NONE:
+                    detail["codec"] = fl.codec
+                    detail["wire_delivered_bytes"] = fl.wire_delivered_bytes()
                 ledger.append(seq, res.timeline["ready"], "join",
-                              fl.new_node, "ready", {
-                                  "delay_s": res.delay_s,
-                                  "replication_s": res.replication_s,
-                                  "replans": res.replans,
-                                  "credited_bytes": fl.credited_bytes(),
-                                  "plan": fl.plan.summary(),
-                              })
+                              fl.new_node, "ready", detail)
                 self.inflight.remove(fl)
 
     def _replan_touched(self, ledger: EventLedger, *, node=None, link=None):
@@ -419,15 +437,21 @@ class SimBackend:
             if self.sched.replan_scale_out(fl):
                 self._stall_faulted_streams(fl)
                 delivered = fl.delivered_bytes()
+                detail = {
+                    "replans": fl.replans,
+                    "delivered_bytes": delivered,
+                    "credited_bytes": fl.credited_bytes(),
+                    "replanned_bytes": max(
+                        0, fl.state_bytes - delivered),
+                    "plan": fl.plan.summary(),
+                }
+                if fl.codec != wire_codec.CODEC_NONE:
+                    detail["codec"] = fl.codec
+                    detail["credited_wire_bytes"] = fl.credited_wire_bytes()
+                    detail["replanned_wire_bytes"] = int(
+                        fl.plan.total_wire_bytes())
                 ledger.append(seq, self.cluster.sim.now, "join", fl.new_node,
-                              "replanned", {
-                                  "replans": fl.replans,
-                                  "delivered_bytes": delivered,
-                                  "credited_bytes": fl.credited_bytes(),
-                                  "replanned_bytes": max(
-                                      0, fl.state_bytes - delivered),
-                                  "plan": fl.plan.summary(),
-                              })
+                              "replanned", detail)
             else:
                 self.inflight.remove(fl)
                 self._inflight_seq.pop(fl.new_node, None)
@@ -451,14 +475,18 @@ class SimBackend:
             return
         fl = self.sched.begin_scale_out(node, links, self.cluster.state_bytes,
                                         self.cluster.tensor_sizes,
-                                        compute_s=ev.compute_s)
+                                        compute_s=ev.compute_s, codec=ev.codec)
         self._stall_faulted_streams(fl)
         self.inflight.append(fl)
         self._inflight_seq[node] = seq
-        ledger.append(seq, ev.t, ev.kind, node, "scale-out-started", {
+        detail = {
             "peers": sorted(links),
             "plan": fl.plan.summary(),
-        })
+        }
+        if fl.codec != wire_codec.CODEC_NONE:
+            detail["codec"] = fl.codec
+            detail["wire_bytes_total"] = int(fl.plan.total_wire_bytes())
+        ledger.append(seq, ev.t, ev.kind, node, "scale-out-started", detail)
 
     def _on_leave(self, seq: int, ev: ChurnEvent, ledger: EventLedger):
         node = ev.node
@@ -905,12 +933,13 @@ def run_trace_sim(cluster: SimCluster, events: Iterable[ChurnEvent],
                   solver_charge_s=SimBackend.DEFAULT_SOLVER_CHARGE_S,
                   partial_credit: bool = True, detection_seed: int = 0,
                   detector: str = "phi",
+                  codec: str = wire_codec.CODEC_NONE,
                   ) -> Tuple[EventLedger, Dict[int, object]]:
     """Replay a churn trace through the engine on a simulated cluster."""
     engine = ChurnEngine(SimBackend(cluster, min_active=min_active,
                                     solver_charge_s=solver_charge_s,
                                     partial_credit=partial_credit,
                                     detection_seed=detection_seed,
-                                    detector=detector))
+                                    detector=detector, codec=codec))
     ledger = engine.run(events)
     return ledger, engine.results

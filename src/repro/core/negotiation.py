@@ -25,6 +25,7 @@ import time as _time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro.core import codec as wire_codec
 from repro.core.monitor import ClusterMonitor, MEASURE_SECONDS
 from repro.core.plans import ReplicationPlan, build_plan, trim_tensor_sizes
 from repro.core.simulator import (
@@ -66,15 +67,25 @@ class PrimitiveResult:
 class TransferRecord:
     """One source→new-node shard stream of an in-flight replication.
 
-    ``credited`` is set when churn cancels the stream mid-flight: the bytes
-    that had already landed on the new node, floored to the plan's shard
-    boundary (a resumable prefix — partial shards are re-sent)."""
+    ``nbytes`` is the payload the stream installs; ``wire_nbytes`` is what
+    rides the network (== ``nbytes`` under the ``none`` codec). The handle's
+    progress therefore meters **wire** bytes. ``credited`` is set when churn
+    cancels the stream mid-flight: the payload bytes that had already landed
+    on the new node, floored to a shard boundary (a resumable prefix —
+    partial shards are re-sent); ``credited_wire`` is the matching wire-byte
+    prefix (whole wire-shards, each of which decodes to one payload shard)."""
     source: int
     nbytes: int
     route: List[int]
     handle: TransferHandle
     gen: int  # 0 for the original plan, 1+ per re-plan
-    credited: int = 0  # shard-floored bytes retained after cancellation
+    credited: int = 0  # shard-floored payload bytes retained after cancellation
+    codec: str = wire_codec.CODEC_NONE
+    wire_nbytes: int = 0  # bytes on the wire (== nbytes when codec is none)
+    payload_shard: int = 0  # this generation's shard granularity (payload)
+    wire_shard: int = 0  # one encoded shard's framed size on the wire
+    decode_s: float = 0.0  # decode charge before the payload installs
+    credited_wire: int = 0  # wire-byte prefix kept after cancellation
 
 
 @dataclass
@@ -101,17 +112,27 @@ class InflightScaleOut:
     replans: int = 0
     aborted: bool = False
     t_last_credit: float = 0.0  # virtual time of the latest credited prefix
+    codec: str = wire_codec.CODEC_NONE  # codec policy this scale-out runs under
 
     def delivered_bytes(self) -> int:
-        """Bytes already on the new node: completed streams + the credited
-        prefixes of cancelled ones."""
+        """Payload bytes already on the new node: completed streams + the
+        credited prefixes of cancelled ones."""
         return (sum(r.nbytes for r in self.transfers if r.handle.done)
                 + self.credited_bytes())
 
     def credited_bytes(self) -> int:
-        """Bytes salvaged from cancelled partial streams (never forfeited
-        back; monotone across re-plans)."""
+        """Payload bytes salvaged from cancelled partial streams (never
+        forfeited back; monotone across re-plans)."""
         return sum(r.credited for r in self.transfers)
+
+    def wire_delivered_bytes(self) -> int:
+        """Wire bytes that reached the new node: completed streams in full
+        plus the whole-wire-shard prefixes of cancelled ones."""
+        return (sum(r.wire_nbytes for r in self.transfers if r.handle.done)
+                + self.credited_wire_bytes())
+
+    def credited_wire_bytes(self) -> int:
+        return sum(r.credited_wire for r in self.transfers)
 
     def pending(self) -> List[TransferRecord]:
         return [r for r in self.transfers
@@ -138,13 +159,18 @@ class ChaosScheduler:
 
     def __init__(self, sim: Sim, net: Network, topo: Topology,
                  session: TrainingSession, *, scheduler_node: int,
-                 strategy: str = "chaos"):
+                 strategy: str = "chaos",
+                 codec: str = wire_codec.CODEC_NONE):
         self.sim = sim
         self.net = net
         self.topo = topo
         self.session = session
         self.node = scheduler_node
         self.strategy = strategy
+        #: codec policy for state-bearing transfers ("none" / "int8" /
+        #: "int8+topk" / "auto" — per-link negotiation resolves the rest).
+        #: "none" keeps every byte and every timestamp pre-codec identical.
+        self.codec = wire_codec.validate_policy(codec)
         self.monitor = ClusterMonitor(sim, net, topo)
         self.monitor.home = scheduler_node  # heartbeats route to the scheduler
         self.monitor.on_node_failure = lambda n: self.scale_in(n, failure=True)
@@ -158,6 +184,11 @@ class ChaosScheduler:
         # forfeiting all in-flight bytes. False restores the pre-credit
         # replan-everything-undelivered behavior (benchmark baseline).
         self.partial_credit = True
+        #: cumulative replication-stream accounting (scheduled transfers
+        #: only — measurement bursts and control datagrams excluded), the
+        #: codec A/B's numerator/denominator.
+        self.replication_payload_bytes = 0
+        self.replication_wire_bytes = 0
 
     # -- control-plane replication / fail-over (repro.core.control) ------------
 
@@ -254,7 +285,12 @@ class ChaosScheduler:
 
     def begin_scale_out(self, new_node: int, links: Dict[int, Link],
                         state_bytes: int, tensor_sizes: Sequence[int],
-                        compute_s: float = 1.0) -> InflightScaleOut:
+                        compute_s: float = 1.0,
+                        codec: Optional[str] = None) -> InflightScaleOut:
+        # Per-join codec override (trace events may carry one); None means
+        # the scheduler's standing policy.
+        policy = (self.codec if codec is None
+                  else wire_codec.validate_policy(codec))
         t0 = self.sim.now
         timeline = {"request": t0}
 
@@ -287,7 +323,7 @@ class ChaosScheduler:
         #    (or a fixed deterministic charge under the churn engine).
         wall0 = _time.perf_counter()
         plan = build_plan(self.strategy, self.topo, new_node, state_bytes,
-                          tensor_sizes, sync)
+                          tensor_sizes, sync, codec=policy)
         wall = _time.perf_counter() - wall0
         solver_s = wall if self.solver_time_model is None else self.solver_time_model
         t_plan = t_measured + solver_s
@@ -300,29 +336,49 @@ class ChaosScheduler:
 
         fl = InflightScaleOut(new_node, t0, int(state_bytes),
                               list(tensor_sizes), neighbor_ids, plan, sync,
-                              solver_s, t_transfers_start, timeline)
+                              solver_s, t_transfers_start, timeline,
+                              codec=policy)
         self._schedule_transfers(fl, plan, t_transfers_start, sync, gen=0)
         return fl
 
     def _schedule_transfers(self, fl: InflightScaleOut, plan: ReplicationPlan,
                             t_start: float, sync: Dict[int, float], gen: int):
+        """Schedule one stream per plan source. What rides the network is the
+        **wire** byte count (payload + per-shard scale framing); the source's
+        encode charge delays the first byte and the joining node's decode
+        charge lands after delivery (``finish_scale_out``). Under the
+        ``none`` codec wire == payload and both charges are exactly 0.0, so
+        every scheduled timestamp is bit-identical to the pre-codec path."""
         for u, nbytes in plan.sources.items():
             route = plan.routes[u]
+            cname = plan.codec_for(u)
+            wire = plan.wire_for(u)
+            self.replication_payload_bytes += int(nbytes)
+            self.replication_wire_bytes += int(wire)
             handle = TransferHandle()
-            fl.transfers.append(TransferRecord(u, int(nbytes), route, handle, gen))
-            start = t_start + sync.get(u, 0.0)
+            fl.transfers.append(TransferRecord(
+                u, int(nbytes), route, handle, gen,
+                codec=cname, wire_nbytes=int(wire),
+                payload_shard=int(plan.shard_size),
+                wire_shard=plan.wire_shard_for(u),
+                decode_s=wire_codec.decode_s(cname, nbytes)))
+            start = (t_start + sync.get(u, 0.0)
+                     + wire_codec.encode_s(cname, nbytes))
 
-            def launch(route=route, nbytes=nbytes, handle=handle):
+            def launch(route=route, wire=wire, handle=handle):
                 # Invalidated (or silently stalled) before the bytes moved.
                 if handle.cancelled or handle.stalled:
                     return
-                self.net.transfer(route, nbytes, lambda t: None, handle=handle)
+                self.net.transfer(route, wire, lambda t: None, handle=handle)
 
             self.sim.at(start, launch)
 
     def finish_scale_out(self, fl: InflightScaleOut) -> ScaleOutResult:
-        """Finalize a drained replication: install state + policy, activate."""
-        done_ts = [r.handle.done_t for r in fl.transfers if r.handle.done]
+        """Finalize a drained replication: install state + policy, activate.
+        Each stream's payload is usable only after its decode charge (0.0
+        under the ``none`` codec)."""
+        done_ts = [r.handle.done_t + r.decode_s
+                   for r in fl.transfers if r.handle.done]
         t_state_done = max(done_ts, default=fl.t_transfers_start)
         # A replication finished by credited prefixes (remaining hit zero at
         # cancellation) is complete at the credit instant, not earlier.
@@ -351,18 +407,35 @@ class ChaosScheduler:
         each cancelled stream's delivered bytes to a whole-shard boundary
         (partial shards are re-sent — they can't be verified/installed);
         ``shard_size == 0`` (single-/multi-source baselines) credits the raw
-        byte prefix. With ``partial_credit`` off, cancelled streams forfeit
-        everything in flight — the pre-credit behavior."""
+        byte prefix. Under a non-``none`` codec the handle meters **wire**
+        bytes and shards are framed independently, so the credit floors the
+        wire prefix to whole *wire* shards — each of which decodes to exactly
+        one payload shard — and converts back to payload bytes (unsharded
+        streams credit the proportional payload prefix). With
+        ``partial_credit`` off, cancelled streams forfeit everything in
+        flight — the pre-credit behavior."""
         now = self.sim.now
         shard = int(fl.plan.shard_size) if self.partial_credit else 0
         for r in fl.pending():
             r.handle.cancel(now)
-            if self.partial_credit:
-                got = int(r.handle.cancelled_delivered)
+            if not self.partial_credit:
+                continue
+            got = int(r.handle.cancelled_delivered)
+            if r.codec == wire_codec.CODEC_NONE:
                 keep = (got // shard) * shard if shard > 0 else got
                 r.credited = min(int(keep), int(r.nbytes))
-                if r.credited > 0:
-                    fl.t_last_credit = max(fl.t_last_credit, now)
+                r.credited_wire = r.credited
+            elif r.wire_shard > 0:
+                n_shards = got // r.wire_shard
+                r.credited = min(n_shards * r.payload_shard, int(r.nbytes))
+                r.credited_wire = min(n_shards * r.wire_shard,
+                                      int(r.wire_nbytes))
+            else:  # unsharded encoded stream: proportional payload prefix
+                frac = got / r.wire_nbytes if r.wire_nbytes else 0.0
+                r.credited = min(int(frac * r.nbytes), int(r.nbytes))
+                r.credited_wire = min(got, int(r.wire_nbytes))
+            if r.credited > 0:
+                fl.t_last_credit = max(fl.t_last_credit, now)
         remaining = fl.state_bytes - fl.delivered_bytes()
         if remaining <= 0:
             return True  # everything already on the new node
@@ -373,7 +446,7 @@ class ChaosScheduler:
         wall0 = _time.perf_counter()
         sizes = trim_tensor_sizes(fl.tensor_sizes, remaining)
         plan = build_plan(self.strategy, self.topo, fl.new_node, remaining,
-                          sizes, sync=None)
+                          sizes, sync=None, codec=fl.codec)
         wall = _time.perf_counter() - wall0
         solver_s = wall if self.solver_time_model is None else self.solver_time_model
         fl.solver_s += solver_s
@@ -503,7 +576,8 @@ class SimCluster:
 
     def __init__(self, topo: Topology, *, state_bytes: int,
                  tensor_sizes: Sequence[int], strategy: str = "chaos",
-                 scheduler_node: Optional[int] = None):
+                 scheduler_node: Optional[int] = None,
+                 codec: str = wire_codec.CODEC_NONE):
         self.sim = Sim()
         self.topo = topo
         self.net = Network(self.sim, topo)
@@ -512,7 +586,8 @@ class SimCluster:
         self.tensor_sizes = list(tensor_sizes)
         sched = scheduler_node if scheduler_node is not None else min(topo.active_nodes())
         self.scheduler = ChaosScheduler(self.sim, self.net, topo, self.session,
-                                        scheduler_node=sched, strategy=strategy)
+                                        scheduler_node=sched, strategy=strategy,
+                                        codec=codec)
 
     def train(self, iterations: int = 1):
         self.session.run_iterations(iterations)

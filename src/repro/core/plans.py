@@ -25,9 +25,10 @@ Unicron/ElasWave applied to mid-replication churn.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.core import codec as wire_codec
 from repro.core.sharding_alg import (
     Assignment,
     NeighborLink,
@@ -45,21 +46,61 @@ class ReplicationPlan:
     ``shard_size`` is the Algorithm-1 shard granularity in bytes; 0 for the
     baseline strategies that stream unsharded. It doubles as the credit
     granularity when churn interrupts the plan: a cancelled stream keeps
-    its whole-shard delivered prefix (partial shards are re-sent)."""
+    its whole-shard delivered prefix (partial shards are re-sent).
+
+    ``sources`` stays in **payload** bytes (what the joining node must
+    install); ``codecs``/``wire_sources`` carry the per-source negotiated
+    codec and the bytes that actually cross the wire — payload plus
+    per-block scale framing, framed per shard so whole-wire-shard prefixes
+    decode to whole payload shards (partial-credit exactness). Both stay
+    empty under the ``"none"`` policy so plan summaries — and therefore
+    ledgers — are byte-identical to the pre-codec format."""
     strategy: str
-    sources: Dict[int, int]  # source node -> bytes to send
+    sources: Dict[int, int]  # source node -> payload bytes to send
     routes: Dict[int, List[int]]  # source node -> path to new node
     predicted_delay_s: float
     shard_size: int = 0  # Alg-1 shard bytes; 0 = unsharded stream
+    codecs: Dict[int, str] = field(default_factory=dict)  # source -> codec
+    wire_sources: Dict[int, int] = field(default_factory=dict)  # source -> wire bytes
+
+    def codec_for(self, u: int) -> str:
+        return self.codecs.get(u, wire_codec.CODEC_NONE)
+
+    def wire_for(self, u: int):
+        """Wire bytes for source ``u`` (== payload bytes under ``none``)."""
+        if u in self.wire_sources:
+            return self.wire_sources[u]
+        return self.sources.get(u, 0)
+
+    def wire_shard_for(self, u: int) -> int:
+        """Credit granularity on the wire for source ``u``: each payload
+        shard is encoded independently, so one wire shard is
+        ``wire_bytes(codec, shard_size)`` framed bytes."""
+        if self.shard_size <= 0:
+            return 0
+        return int(wire_codec.wire_bytes(self.codec_for(u), self.shard_size))
+
+    def codec_active(self) -> bool:
+        return any(c != wire_codec.CODEC_NONE for c in self.codecs.values())
+
+    def total_wire_bytes(self):
+        return sum(self.wire_for(u) for u in self.sources)
 
     def summary(self) -> dict:
-        """Deterministic dict for event ledgers (sorted keys, ints/floats)."""
-        return {
+        """Deterministic dict for event ledgers (sorted keys, ints/floats).
+        Codec fields appear only when a non-``none`` codec was negotiated —
+        ``codec="none"`` summaries are byte-identical to the legacy format."""
+        out = {
             "strategy": self.strategy,
             "sources": {str(u): int(b) for u, b in sorted(self.sources.items())},
             "predicted_delay_s": float(self.predicted_delay_s),
             "shard_size": int(self.shard_size),
         }
+        if self.codec_active():
+            out["codecs"] = {str(u): c for u, c in sorted(self.codecs.items())}
+            out["wire_bytes"] = {str(u): int(self.wire_for(u))
+                                 for u in sorted(self.sources)}
+        return out
 
 
 def plan_assignment(
@@ -83,51 +124,112 @@ def measured_neighbors(
     return out
 
 
+def _negotiated_codecs(
+    topo: Topology, new_node: int, neighbors: Sequence[int], codec: str
+) -> Dict[int, str]:
+    """Per-neighbor codec negotiation over the measured direct links."""
+    return {u: wire_codec.negotiate(codec,
+                                    topo.link(u, new_node).bandwidth_mbps)
+            for u in neighbors}
+
+
+def _derated_neighbors(
+    nb: Dict[int, NeighborLink], codecs: Dict[int, str]
+) -> Dict[int, NeighborLink]:
+    """Planner view of the links under the negotiated codecs: per-payload-byte
+    time shrinks by the wire ratio and grows by the amortized encode/decode
+    compute, so Algorithm 1+2 loads sources codec-aware."""
+    return {u: NeighborLink(
+        l.prop_s,
+        wire_codec.effective_trans_s_per_byte(codecs[u], l.trans_s_per_byte),
+        l.sync_s) for u, l in nb.items()}
+
+
+def _wire_fields(sources: Dict[int, int], codecs: Dict[int, str],
+                 shard_size: int) -> Tuple[Dict[int, str], Dict[int, int]]:
+    """(codecs, wire_sources) for a plan — both empty when every negotiated
+    codec is ``none`` so the plan (and its ledger summary) stays byte-identical
+    to the pre-codec format. Wire bytes are framed **per shard**: ``n`` whole
+    payload shards cost ``n * wire_bytes(shard)`` on the wire."""
+    active = {u: codecs.get(u, wire_codec.CODEC_NONE) for u in sources}
+    if all(c == wire_codec.CODEC_NONE for c in active.values()):
+        return {}, {}
+    wire: Dict[int, int] = {}
+    for u, nbytes in sources.items():
+        c = active[u]
+        if shard_size > 0 and nbytes:
+            n_whole, rem = divmod(int(nbytes), int(shard_size))
+            w = n_whole * wire_codec.wire_bytes(c, shard_size)
+            if rem:
+                w += wire_codec.wire_bytes(c, rem)
+            wire[u] = int(w)
+        else:
+            wire[u] = int(wire_codec.wire_bytes(c, nbytes))
+    return active, wire
+
+
 def chaos_plan(
     topo: Topology, new_node: int, state_bytes: int,
     tensor_sizes: Sequence[int], sync: Optional[Dict[int, float]] = None,
-    solver=plan_assignment,
+    solver=plan_assignment, codec: str = wire_codec.CODEC_NONE,
 ) -> ReplicationPlan:
     """Multi-neighbor replication with Algorithm 1+2 shard scheduling."""
     nb = measured_neighbors(topo, new_node, sync)
-    asg = solver(tensor_sizes, nb)
+    codecs = _negotiated_codecs(topo, new_node, list(nb), codec)
+    planner_nb = (nb if all(c == wire_codec.CODEC_NONE for c in codecs.values())
+                  else _derated_neighbors(nb, codecs))
+    asg = solver(tensor_sizes, planner_nb)
     sources = {u: len(ks) * asg.shard_size for u, ks in
                asg.shards_per_neighbor.items() if ks}
     routes = {u: [u, new_node] for u in sources}
+    cds, wire = _wire_fields(sources, codecs, int(asg.shard_size))
     return ReplicationPlan("chaos", sources, routes, asg.completion_s,
-                           shard_size=int(asg.shard_size))
+                           shard_size=int(asg.shard_size),
+                           codecs=cds, wire_sources=wire)
 
 
-def chaos_even_plan(topo, new_node, state_bytes, tensor_sizes, sync=None):
+def chaos_even_plan(topo, new_node, state_bytes, tensor_sizes, sync=None,
+                    codec: str = wire_codec.CODEC_NONE):
     """Multi-neighbor replication with *even* shards (ablation variant)."""
     nb = measured_neighbors(topo, new_node, sync)
+    codecs = _negotiated_codecs(topo, new_node, list(nb), codec)
+    planner_nb = (nb if all(c == wire_codec.CODEC_NONE for c in codecs.values())
+                  else _derated_neighbors(nb, codecs))
     k = len(nb)
     s = math.ceil(state_bytes / k)
-    asg = even_assignment(k, s, nb)
+    asg = even_assignment(k, s, planner_nb)
     sources = {u: len(ks) * s for u, ks in asg.shards_per_neighbor.items() if ks}
+    cds, wire = _wire_fields(sources, codecs, int(s))
     return ReplicationPlan("multi-neighbor-even", sources,
                            {u: [u, new_node] for u in sources}, asg.completion_s,
-                           shard_size=int(s))
+                           shard_size=int(s), codecs=cds, wire_sources=wire)
 
 
 def single_source_plan(
-    topo: Topology, new_node: int, state_bytes: int, sync=None
+    topo: Topology, new_node: int, state_bytes: int, sync=None,
+    codec: str = wire_codec.CODEC_NONE,
 ) -> ReplicationPlan:
     """EDL+ [13]/Elan [14]: pull everything from the fastest neighbor."""
     nb = measured_neighbors(topo, new_node, sync)
     if not nb:
         raise ValueError("new node has no neighbors")
+    codecs = _negotiated_codecs(topo, new_node, list(nb), codec)
     best_u, best_t = None, float("inf")
     for u, l in nb.items():
-        t = l.prop_s + l.sync_s + state_bytes * l.trans_s_per_byte
+        per = wire_codec.effective_trans_s_per_byte(codecs[u],
+                                                    l.trans_s_per_byte)
+        t = l.prop_s + l.sync_s + state_bytes * per
         if t < best_t:
             best_u, best_t = u, t
+    cds, wire = _wire_fields({best_u: state_bytes}, codecs, 0)
     return ReplicationPlan("single-source", {best_u: state_bytes},
-                           {best_u: [best_u, new_node]}, best_t)
+                           {best_u: [best_u, new_node]}, best_t,
+                           codecs=cds, wire_sources=wire)
 
 
 def multi_source_plan(
-    topo: Topology, new_node: int, state_bytes: int, sync=None
+    topo: Topology, new_node: int, state_bytes: int, sync=None,
+    codec: str = wire_codec.CODEC_NONE,
 ) -> ReplicationPlan:
     """Autoscaling [18]: even shards from ALL active nodes, routed along
     shortest paths — multi-hop forwards included (Fig 1c pathology)."""
@@ -136,27 +238,37 @@ def multi_source_plan(
     if not others:
         raise ValueError("no sources")
     share = math.ceil(state_bytes / len(others))
-    sources, routes = {}, {}
+    sources, routes, codecs = {}, {}, {}
     link_load: Dict[Tuple[int, int], float] = {}
     worst_path = 0.0
     for u in others:
         path = topo.shortest_path(u, new_node, share)
         prop, trans = topo.path_delay_per_byte(path)
+        # Multi-hop negotiation keys off the path bottleneck: the encoded
+        # stream is forwarded verbatim, so one codec serves the whole path.
+        codecs[u] = wire_codec.negotiate(
+            codec, wire_codec.link_bandwidth_mbps(
+                max(topo.link(a, b).trans_delay_per_byte
+                    for a, b in zip(path, path[1:]))))
+        eff = wire_codec.effective_trans_s_per_byte(codecs[u], trans)
         sources[u] = share
         routes[u] = path
-        worst_path = max(worst_path, prop + share * trans + (sync or {}).get(u, 0.0))
+        worst_path = max(worst_path, prop + share * eff + (sync or {}).get(u, 0.0))
+        wire_share = wire_codec.wire_bytes(codecs[u], share)
         for a, b in zip(path, path[1:]):
             key = (min(a, b), max(a, b))
-            link_load[key] = link_load.get(key, 0.0) + share
+            link_load[key] = link_load.get(key, 0.0) + wire_share
     # Multi-hop routes serialize on shared links (Fig 1c): the completion time
-    # is bounded below by the most-loaded link's drain time.
+    # is bounded below by the most-loaded link's drain time (in wire bytes).
     bottleneck = max(
         (load * topo.link(a, b).trans_delay_per_byte
          for (a, b), load in link_load.items()),
         default=0.0,
     )
+    cds, wire = _wire_fields(sources, codecs, 0)
     return ReplicationPlan("multi-source", sources, routes,
-                           max(worst_path, bottleneck))
+                           max(worst_path, bottleneck),
+                           codecs=cds, wire_sources=wire)
 
 
 STRATEGY_BUILDERS = {
@@ -170,17 +282,24 @@ STRATEGY_BUILDERS = {
 def build_plan(
     strategy: str, topo: Topology, new_node: int, state_bytes: int,
     tensor_sizes: Sequence[int], sync: Optional[Dict[int, float]] = None,
+    codec: str = wire_codec.CODEC_NONE,
 ) -> ReplicationPlan:
     """Strategy-dispatched plan construction — the single entry point used by
-    the scheduler, the churn engine, and the benchmarks."""
+    the scheduler, the churn engine, and the benchmarks. ``codec`` is the
+    scheduler policy (``none``/``int8``/``int8+topk``/``auto``); negotiation
+    resolves it per source link."""
     if strategy in ("chaos",):
-        return chaos_plan(topo, new_node, state_bytes, tensor_sizes, sync)
+        return chaos_plan(topo, new_node, state_bytes, tensor_sizes, sync,
+                          codec=codec)
     if strategy == "chaos-even":
-        return chaos_even_plan(topo, new_node, state_bytes, tensor_sizes, sync)
+        return chaos_even_plan(topo, new_node, state_bytes, tensor_sizes, sync,
+                               codec=codec)
     if strategy == "single-source":
-        return single_source_plan(topo, new_node, state_bytes, sync)
+        return single_source_plan(topo, new_node, state_bytes, sync,
+                                  codec=codec)
     if strategy == "multi-source":
-        return multi_source_plan(topo, new_node, state_bytes, sync)
+        return multi_source_plan(topo, new_node, state_bytes, sync,
+                                 codec=codec)
     raise ValueError(f"unknown strategy {strategy!r}")
 
 

@@ -16,10 +16,18 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro.core import codec as wire_codec
 from repro.core.plans import plan_assignment
 from repro.core.sharding_alg import Assignment, NeighborLink
+from repro.optim.compression import (
+    Q_BLOCK,
+    compressed_bytes,
+    int8_dequantize,
+    int8_quantize,
+)
 
 
 @dataclass(frozen=True)
@@ -117,6 +125,139 @@ def assemble_shards(shards: Dict[int, bytes], ranges: Sequence[ShardRange],
         seen += r.nbytes
     assert seen == total_bytes
     return buf
+
+
+# ---------------------------------------------------------------------------
+# Wire codec on real arrays (repro.core.codec is the cost model; this is the
+# data path): fp32 leaves ship as int8 codes + per-block fp32 scales — the
+# exact framing kernels/shard_codec.py produces on TPU, with
+# optim/compression.int8_quantize as the bit-identical jnp reference on
+# hosts. Non-fp32 leaves ship raw: the scale/2 error bound is an fp32
+# contract (see int8_dequantize), and integer/bool runtime state must
+# survive exactly.
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class EncodedLeaf:
+    """One tensor of an encoded state: either int8 codes + scales, or the
+    raw array (non-fp32 dtypes, or the ``none`` codec)."""
+    kind: str  # "int8" | "raw"
+    payload_bytes: int
+    wire_bytes: int
+    codes: Optional[np.ndarray] = None
+    scales: Optional[np.ndarray] = None
+    meta: Optional[tuple] = None
+    raw: Optional[np.ndarray] = None
+
+
+def _kernel_encode_matches(xf_blocks: np.ndarray, codes: np.ndarray,
+                           scales: np.ndarray) -> bool:
+    """Run the Pallas shard codec on the padded block view and assert it is
+    bit-identical to the jnp reference (codes AND scales). Returns False —
+    without failing the encode — only when Pallas itself is unavailable in
+    this runtime; a completing kernel that disagrees is a hard error."""
+    try:
+        from repro.kernels.shard_codec import shard_encode_kernel
+        kc, ks = shard_encode_kernel(xf_blocks)
+    except ImportError:  # pragma: no cover - pallas missing entirely
+        return False
+    kc, ks = np.asarray(kc), np.asarray(ks)
+    assert np.array_equal(kc, np.asarray(codes)), \
+        "shard_encode_kernel codes diverged from int8_quantize reference"
+    assert np.array_equal(ks, np.asarray(scales)), \
+        "shard_encode_kernel scales diverged from int8_quantize reference"
+    return True
+
+
+def encode_state(tree, codec: str = wire_codec.CODEC_INT8,
+                 *, verify_kernel: bool = True):
+    """Encode a training-state pytree for the wire.
+
+    Returns ``(leaves, manifest, total_wire_bytes)``. fp32 leaves are
+    int8-block-quantized (one fp32 scale per ``Q_BLOCK`` elements); other
+    dtypes ship raw. With ``verify_kernel`` the Pallas kernel re-encodes
+    each quantized leaf and must match the reference bit-for-bit. Any
+    non-``none`` codec quantizes the same way — top-k is a gradient-exchange
+    refinement with no residual to absorb its error here, so replication
+    state never drops elements (the simulator's int8+topk wire model applies
+    to gradient-like payloads)."""
+    manifest = build_manifest(tree)
+    leaves = jax.tree_util.tree_leaves(tree)
+    out: List[EncodedLeaf] = []
+    total_wire = 0
+    for entry, leaf in zip(manifest.entries, leaves):
+        # ascontiguousarray promotes 0-d to (1,); reshape restores scalars.
+        arr = np.ascontiguousarray(np.asarray(leaf)).reshape(entry.shape)
+        if (codec != wire_codec.CODEC_NONE and arr.dtype == np.float32
+                and arr.size):
+            codes, scales, meta = int8_quantize(jnp.asarray(arr))
+            codes, scales = np.asarray(codes), np.asarray(scales)
+            if verify_kernel:
+                pad = (-arr.size) % Q_BLOCK
+                xf = np.pad(arr.reshape(-1), (0, pad)).reshape(-1, Q_BLOCK)
+                _kernel_encode_matches(jnp.asarray(xf), codes, scales)
+            wire = int(compressed_bytes(codes, scales))
+            out.append(EncodedLeaf("int8", arr.nbytes, wire,
+                                   codes=codes, scales=scales, meta=meta))
+        else:
+            wire = arr.nbytes
+            out.append(EncodedLeaf("raw", arr.nbytes, wire, raw=arr))
+        total_wire += wire
+    return out, manifest, total_wire
+
+
+def decode_state(leaves: Sequence[EncodedLeaf], manifest: StateManifest,
+                 *, verify_kernel: bool = True):
+    """Inverse of :func:`encode_state`: rebuild the pytree on the joining
+    node. int8 leaves decode through ``int8_dequantize`` (fp32-exact
+    ``code * scale``), with the Pallas decode kernel cross-checked
+    bit-for-bit when available. Every decoded fp32 element satisfies
+    ``|decoded - original| <= scale_of_its_block / 2``."""
+    arrs = []
+    for e in leaves:
+        if e.kind == "raw":
+            arrs.append(e.raw)
+            continue
+        dec = np.asarray(int8_dequantize(jnp.asarray(e.codes),
+                                         jnp.asarray(e.scales), e.meta))
+        if verify_kernel:
+            try:
+                from repro.kernels.shard_codec import shard_decode_kernel
+                kd = np.asarray(shard_decode_kernel(
+                    jnp.asarray(e.codes), jnp.asarray(e.scales)))
+            except ImportError:  # pragma: no cover - pallas missing
+                kd = None
+            if kd is not None:
+                n = dec.size
+                assert np.array_equal(kd.reshape(-1)[:n],
+                                      dec.reshape(-1).astype(np.float32)), \
+                    "shard_decode_kernel diverged from int8_dequantize"
+        arrs.append(dec)
+    return jax.tree_util.tree_unflatten(manifest.treedef, arrs)
+
+
+def roundtrip_max_error_ok(tree, decoded_tree,
+                           leaves: Sequence[EncodedLeaf]) -> bool:
+    """Check the documented bound: every int8-encoded fp32 element is within
+    ``scale/2`` of the original (raw leaves must match exactly). The bound
+    gets a 1e-5 relative slack for fp32 rounding of the quantize ratio and
+    the ``code * scale`` reconstruction (see int8_dequantize's contract)."""
+    orig = jax.tree_util.tree_leaves(tree)
+    dec = jax.tree_util.tree_leaves(decoded_tree)
+    for o, d, e in zip(orig, dec, leaves):
+        o, d = np.asarray(o), np.asarray(d)
+        if e.kind == "raw":
+            if not np.array_equal(o, d):
+                return False
+            continue
+        err = np.abs(o.astype(np.float32) - d.astype(np.float32)).reshape(-1)
+        pad = (-err.size) % Q_BLOCK
+        err = np.pad(err, (0, pad)).reshape(-1, Q_BLOCK)
+        bound = np.asarray(e.scales)[:, None] / 2.0
+        if not np.all(err <= bound * (1.0 + 1e-5)):
+            return False
+    return True
 
 
 # ---------------------------------------------------------------------------

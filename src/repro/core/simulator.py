@@ -161,6 +161,14 @@ class Network:
         self._link_free: Dict[Tuple[int, int], float] = {}
         self._link_loss: Dict[Tuple[int, int], float] = {}
         self.bytes_on_wire = 0.0
+        #: wire bytes of bulk (contending) transfers, counted once per
+        #: transfer (not per hop) — callers pass codec *wire* byte counts
+        #: (repro.core.codec), so this is the codec A/B's numerator: what
+        #: state replication actually put on the network.
+        self.data_wire_bytes = 0.0
+        #: wire bytes of non-contending control datagrams (heartbeats,
+        #: probes, deputy syncs/acks), same once-per-transfer convention.
+        self.control_wire_bytes = 0.0
         self.control_messages = 0
         #: completed *bulk* deliveries are reported here as (route, t) — the
         #: cluster monitor subscribes to piggyback probe/heartbeat evidence
@@ -218,6 +226,12 @@ class Network:
                  contend: bool = True) -> TransferHandle:
         """Send ``nbytes`` along ``route`` (store-and-forward per hop).
 
+        ``nbytes`` is the caller's **wire** byte count: transfer duration,
+        per-link FIFO occupancy, and the ``1/(1-loss)`` goodput inflation
+        all apply to what actually crosses the wire. Codec-encoded
+        replication streams (repro.core.codec) pass their framed wire size
+        here — payload-byte accounting lives with the caller.
+
         Returns a :class:`TransferHandle`; cancelling it before delivery
         suppresses ``on_done`` (used by the churn engine to invalidate
         replications overtaken by a later churn event). The handle's
@@ -232,6 +246,10 @@ class Network:
         ``contend=False`` sends a non-contending control datagram (see the
         class docstring)."""
         handle = handle if handle is not None else TransferHandle()
+        if contend:
+            self.data_wire_bytes += nbytes
+        else:
+            self.control_wire_bytes += nbytes
         t = self.sim.now
         last_start, last_link, last_per = t, None, 0.0
         for a, b in zip(route, route[1:]):

@@ -38,8 +38,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import codec as wire_codec
 from repro.core.engine import MIN_LINK_MBPS, ChurnEngine, ChurnEvent, EventLedger
-from repro.core.replication import plan_replication
+from repro.core.replication import (
+    decode_state,
+    encode_state,
+    plan_replication,
+    roundtrip_max_error_ok,
+)
 from repro.core.sharding_alg import NeighborLink
 from repro.core.topology import MBPS
 
@@ -63,8 +69,14 @@ class ElasticTrainer:
                  initial: int = 2, per_device_batch: int = 2,
                  link_model: Optional[Callable[[int], NeighborLink]] = None,
                  on_reshard: Optional[Callable[[List[int]], None]] = None,
-                 seed: int = 0):
+                 seed: int = 0, codec: str = wire_codec.CODEC_NONE):
         self.model = model
+        #: wire codec for scale-out state movement ("none" / "int8" / ... —
+        #: non-none policies int8-encode fp32 shard buffers through the
+        #: Pallas codec path and report wire bytes; the *installed* state is
+        #: always exact, since a lossy install would diverge the synchronous
+        #: DP replicas the paper's §III premise relies on).
+        self.codec = wire_codec.validate_policy(codec)
         self.pool = list(devices if devices is not None else jax.devices())
         assert initial <= len(self.pool)
         self.active: List = list(self.pool[:initial])
@@ -219,9 +231,16 @@ class ElasticTrainer:
 
     # -- elasticity -----------------------------------------------------------------
 
-    def scale_out(self, device=None) -> ScaleEvent:
+    def scale_out(self, device=None, codec: Optional[str] = None) -> ScaleEvent:
         """Stop-free join: plan shard pulls with Chaos, move state onto the
-        enlarged mesh, reshard the data pipeline. No checkpoint, no restart."""
+        enlarged mesh, reshard the data pipeline. No checkpoint, no restart.
+
+        Under a non-``none`` codec (standing policy or per-call override)
+        the fp32 state buffers are int8-encoded and decoded through the
+        shard codec (Pallas kernel, jnp reference fallback — equivalence
+        asserted) to account wire bytes and validate the ``scale/2``
+        round-trip bound; the state installed on the mesh stays exact."""
+        eff_codec = self.codec if codec is None else wire_codec.validate_policy(codec)
         candidates = [d for d in self.pool if d not in self.active]
         if device is None:
             if not candidates:
@@ -232,6 +251,20 @@ class ElasticTrainer:
         # through their effective (possibly degraded/severed) links.
         neighbors = self.replication_neighbors()
         plan = plan_replication(self.state, neighbors)
+        codec_summary = None
+        if eff_codec != wire_codec.CODEC_NONE:
+            enc, manifest, wire = encode_state(self.state, eff_codec,
+                                               verify_kernel=True)
+            decoded = decode_state(enc, manifest, verify_kernel=True)
+            assert roundtrip_max_error_ok(self.state, decoded, enc), \
+                "shard codec round-trip exceeded the scale/2 error bound"
+            codec_summary = {
+                "codec": eff_codec,
+                "payload_bytes": int(manifest.total_bytes),
+                "wire_bytes": int(wire),
+                "wire_reduction": (float(manifest.total_bytes) / wire
+                                   if wire else 1.0),
+            }
         # Physical state movement onto the enlarged mesh.
         self.active = self.active + [device]
         self.state = jax.device_put(self.state, self._state_sharding())
@@ -239,12 +272,16 @@ class ElasticTrainer:
         wall = time.perf_counter() - t0
         if self.on_reshard:
             self.on_reshard(self.device_ids())
-        ev = ScaleEvent("scale-out", str(device), self.step_count, wall, {
+        summary = {
             "shard_size": plan.assignment.shard_size,
             "n_shards": plan.assignment.n_shards,
             "bytes_per_source": plan.bytes_per_source,
             "predicted_completion_s": plan.assignment.completion_s,
-        })
+        }
+        if codec_summary is not None:
+            summary["codec"] = codec_summary
+        ev = ScaleEvent("scale-out", str(device), self.step_count, wall,
+                        summary)
         self.events.append(ev)
         return ev
 
@@ -405,7 +442,13 @@ class TrainerBackend:
                 ledger.append(seq, ev.t, ev.kind, ev.node, "skipped-pool-exhausted")
                 return
             device = free[0]
-            sev = tr.scale_out(device)
+            # Pass codec only when the event carries one: trainer doubles
+            # (tests' fakes) may predate the kwarg, and an absent field
+            # must leave the trainer's standing policy untouched.
+            if ev.codec is None:
+                sev = tr.scale_out(device)
+            else:
+                sev = tr.scale_out(device, codec=ev.codec)
             # The device may be a reuse of one an earlier trace node shed;
             # purge stale mappings so later events can't mis-target it.
             self._node_device = {n: d for n, d in self._node_device.items()
@@ -413,12 +456,19 @@ class TrainerBackend:
             self._node_device[ev.node] = device
             self._departed.discard(ev.node)
             self.results[seq] = sev
-            ledger.append(seq, ev.t, ev.kind, ev.node, "scale-out", {
+            detail = {
                 "device": device.id, "step": sev.step,
                 "n_active": len(tr.active),
                 "n_shards": sev.plan_summary["n_shards"],
                 "shard_size": sev.plan_summary["shard_size"],
-            })
+            }
+            # Codec wire accounting rides the ledger only when a codec was
+            # active — codec-none traces stay byte-identical across PRs.
+            if "codec" in sev.plan_summary:
+                cs = sev.plan_summary["codec"]
+                detail["codec"] = cs["codec"]
+                detail["wire_bytes"] = cs["wire_bytes"]
+            ledger.append(seq, ev.t, ev.kind, ev.node, "scale-out", detail)
             return
         if ev.kind in ("leave", "node-failure", "node-fault"):
             failure = ev.kind in ("node-failure", "node-fault")

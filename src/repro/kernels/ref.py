@@ -98,7 +98,10 @@ def ssd_ref(x, dt, A_log, Bm, Cm, state=None):
 
 def shard_codec_ref(x_blocks):
     """x_blocks: (nb, block) fp32 → (codes int8, scales fp32 (nb,))."""
-    scale = jnp.maximum(jnp.max(jnp.abs(x_blocks), axis=1), 1e-12) / 127.0
+    # Reciprocal multiply, not "/ 127.0": matches the quantizer and the
+    # Pallas kernel bit-for-bit regardless of how a lowering handles the
+    # division (see optim/compression.int8_quantize).
+    scale = jnp.maximum(jnp.max(jnp.abs(x_blocks), axis=1), 1e-12) * (1.0 / 127.0)
     codes = jnp.clip(jnp.round(x_blocks / scale[:, None]), -127, 127).astype(jnp.int8)
     return codes, scale
 

@@ -17,9 +17,23 @@ from jax.experimental import pallas as pl
 Q_BLOCK = 256
 
 
+def _block_rows(nb: int, rows_per_block: int) -> int:
+    """Rows per grid step: the largest divisor of ``nb`` that fits in
+    ``rows_per_block``. Awkward row counts (nb prime, or just off a power of
+    two) still get multi-row blocks — e.g. nb=300 → 150 rows — instead of
+    collapsing to single-row blocks (300 grid steps of 1 row each)."""
+    r = min(rows_per_block, nb)
+    while nb % r:
+        r -= 1
+    return r
+
+
 def _encode_kernel(x_ref, codes_ref, scale_ref):
     x = x_ref[...].astype(jnp.float32)  # (rows, 256)
-    scale = jnp.maximum(jnp.max(jnp.abs(x), axis=1, keepdims=True), 1e-12) / 127.0
+    # Explicit reciprocal multiply: "/ 127.0" may or may not be rewritten to
+    # this by a given lowering; spelling it out keeps scales bit-identical to
+    # the jnp references (ref.shard_codec_ref, compression.int8_quantize).
+    scale = jnp.maximum(jnp.max(jnp.abs(x), axis=1, keepdims=True), 1e-12) * (1.0 / 127.0)
     codes = jnp.clip(jnp.round(x / scale), -127, 127)
     codes_ref[...] = codes.astype(jnp.int8)
     scale_ref[...] = scale
@@ -34,9 +48,7 @@ def shard_encode_kernel(x_blocks, *, rows_per_block: int = 256,
     """x_blocks: (nb, 256) fp32 → (codes int8 (nb,256), scales fp32 (nb,1))."""
     nb, w = x_blocks.shape
     assert w == Q_BLOCK
-    r = min(rows_per_block, nb)
-    if nb % r:
-        r = 1
+    r = _block_rows(nb, rows_per_block)
     grid = (nb // r,)
     codes, scales = pl.pallas_call(
         _encode_kernel,
@@ -58,9 +70,7 @@ def shard_encode_kernel(x_blocks, *, rows_per_block: int = 256,
 def shard_decode_kernel(codes, scales, *, rows_per_block: int = 256,
                         interpret: bool = True):
     nb, w = codes.shape
-    r = min(rows_per_block, nb)
-    if nb % r:
-        r = 1
+    r = _block_rows(nb, rows_per_block)
     grid = (nb // r,)
     out = pl.pallas_call(
         _decode_kernel,

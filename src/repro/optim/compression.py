@@ -45,22 +45,56 @@ def ef_init(params):
 
 
 def int8_quantize(x, block: int = Q_BLOCK):
-    """x: any-shape float array → (codes int8 (nb, block), scales fp32 (nb,), meta)."""
+    """x: any-shape float array → (codes int8 (nb, block), scales fp32 (nb,), meta).
+
+    This is the jnp reference for ``kernels/shard_codec.shard_encode_kernel``:
+    identical per-block scale formula (max-abs times the fp32 constant 1/127,
+    with a 1e-12 floor) and identical rounding, so codes and scales are
+    **bit-identical** between the two (the pairing property test in
+    tests/test_codec.py pins this down). The scale is written as an explicit
+    reciprocal multiply — a single well-defined fp32 op — because ``/ 127.0``
+    is at the compiler's mercy: one lowering keeps the true division, another
+    rewrites it to the reciprocal, and the two differ by 1 ulp on some
+    inputs, silently breaking the bit-identity contract.
+    """
     n = x.size
     pad = (-n) % block
     xf = jnp.pad(x.astype(jnp.float32).reshape(-1), (0, pad)).reshape(-1, block)
-    scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=1), 1e-12) / 127.0
+    scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=1), 1e-12) * (1.0 / 127.0)
     codes = jnp.clip(jnp.round(xf / scale[:, None]), -127, 127).astype(jnp.int8)
     return codes, scale, (x.shape, x.dtype)
 
 
 def int8_dequantize(codes, scale, meta, block: int = Q_BLOCK):
+    """Inverse of :func:`int8_quantize`, with a documented error guarantee.
+
+    **Max-error bound**: quantization is round-to-nearest inside each block,
+    so for fp32 inputs every element satisfies
+    ``|dequantized - original| <= scale_of_its_block / 2`` up to fp32
+    rounding of the ``x / scale`` ratio and of the ``code * scale``
+    reconstruction — a few ulps of the bound, never more (checked with a
+    1e-5 relative slack in ``repro.core.replication.roundtrip_max_error_ok``
+    and in tests).
+
+    The bound is stated in fp32 — reconstruction happens in fp32 and only
+    the **final** cast goes to the original dtype, so for a non-fp32 input
+    (e.g. bf16/f16 state) the guarantee holds for the fp32 values *before*
+    that cast; the cast adds at most half an ulp of the target dtype on top.
+    Integer dtypes round on the cast, keeping the same scale/2 + 1/2 bound
+    element-wise. Earlier revisions cast silently, losing the bound without
+    a trace — the contract is now explicit and tested.
+    """
     shape, dtype = meta
     n = 1
     for s in shape:
         n *= int(s)
     xf = codes.astype(jnp.float32) * scale[:, None]
-    return xf.reshape(-1)[:n].reshape(shape).astype(dtype)
+    xf = xf.reshape(-1)[:n].reshape(shape)
+    if jnp.issubdtype(dtype, jnp.integer):
+        # Round-to-nearest before the integer cast (a raw cast truncates,
+        # which would double the worst-case error).
+        xf = jnp.round(xf)
+    return xf.astype(dtype)
 
 
 def compressed_bytes(codes, scale) -> int:

@@ -124,6 +124,62 @@ def test_partial_credit_strictly_shrinks_replanned_bytes_and_delay():
     assert post_ready["credited_bytes"] == post["credited_bytes"]
 
 
+def test_codec_int8_credit_is_wire_shard_aligned_and_replans_fewer_bytes():
+    """Churn mid-replication under codec="int8": the cancelled stream's
+    credit is a whole number of *wire* shards (each wire shard decodes to
+    exactly one payload shard — per-shard framing), the payload and wire
+    credits agree on the shard count, and the credit-aware re-plan moves
+    strictly fewer bytes than the pre-credit forfeit under the same codec."""
+    from repro.core import codec as wire_codec
+
+    def replay(partial_credit):
+        cl = _cluster()
+        cl.train(1)
+        t0 = cl.sim.now
+        links = {1: (400.0, 0.01), 2: (600.0, 0.01), 3: (250.0, 0.02)}
+        events = [
+            ChurnEvent(t=t0 + 0.1, kind="join", node=100, links=links),
+            ChurnEvent(t=t0 + 0.9, kind="link-failure", u=2, v=100),
+        ]
+        return run_trace_sim(cl, events, partial_credit=partial_credit,
+                             codec="int8")
+
+    ledger, results = replay(True)
+    started = [r for r in ledger if r.action == "scale-out-started"][0].detail
+    rep = [r for r in ledger if r.action == "replanned"][0].detail
+    shard = started["plan"]["shard_size"]
+    wire_shard = wire_codec.wire_bytes(wire_codec.CODEC_INT8, shard)
+    assert started["codec"] == rep["codec"] == "int8"
+    assert started["wire_bytes_total"] < cl_state_bytes_of(started)
+    # Credit is whole shards in BOTH spaces, and the counts agree: n wire
+    # shards delivered ⇒ n payload shards installed.
+    assert rep["credited_bytes"] > 0
+    assert rep["credited_bytes"] % shard == 0
+    assert rep["credited_wire_bytes"] % wire_shard == 0
+    assert rep["credited_bytes"] // shard == \
+        rep["credited_wire_bytes"] // wire_shard
+    # The re-plan ships compressed bytes: wire strictly below payload.
+    assert rep["replanned_wire_bytes"] < rep["replanned_bytes"]
+    # Against the pre-credit forfeit (same codec): strictly fewer bytes,
+    # in payload and on the wire.
+    pre_ledger, _ = replay(False)
+    pre = [r for r in pre_ledger if r.action == "replanned"][0].detail
+    assert pre["credited_bytes"] == 0
+    assert rep["replanned_bytes"] < pre["replanned_bytes"]
+    assert rep["replanned_wire_bytes"] < pre["replanned_wire_bytes"]
+    # The join completes and reports codec-aware delivery accounting.
+    ready = [r for r in ledger if r.action == "ready"][0].detail
+    assert ready["codec"] == "int8"
+    assert ready["wire_delivered_bytes"] > 0
+    assert results[0].replans == 1
+
+
+def cl_state_bytes_of(started_detail):
+    """Payload total of the started plan (sources sum) — the wire total
+    must undercut it for any non-``none`` codec."""
+    return sum(started_detail["plan"]["sources"].values())
+
+
 def test_link_degrade_mid_replication_triggers_credit_aware_reshuffle():
     cl = _cluster()
     cl.train(1)
