@@ -14,6 +14,7 @@ BENCHMARKS = [
     ("fig9_link_events", "benchmarks.link_events"),
     ("failover_delay", "benchmarks.failover_delay"),
     ("replication_codec", "benchmarks.replication_codec"),
+    ("goodput", "benchmarks.goodput"),
     ("fig10_idle_time", "benchmarks.idle_time"),
     ("fig11_14_convergence", "benchmarks.convergence"),
     ("fig15_replication_ablation", "benchmarks.replication_ablation"),

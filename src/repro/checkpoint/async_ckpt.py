@@ -169,8 +169,19 @@ class AsyncCheckpointer:
         return ckpts[-1] if ckpts else None
 
     def restore_latest(self, skeleton):
-        p = self.latest()
-        if p is None:
-            return None, -1
-        step = int(p.stem.split("_")[1])
-        return load_checkpoint(p, skeleton), step
+        """Restore the newest checkpoint, robust against the background
+        ``_gc``: a path returned by a directory scan can be unlinked by the
+        worker thread before the read opens it. Scan newest-first, fall back
+        to the next-newest on ``FileNotFoundError``, and re-scan once if
+        every candidate vanished mid-pass."""
+        for _ in range(2):
+            ckpts = sorted(self.dir.glob("step_*.ckpt"), reverse=True)
+            if not ckpts:
+                return None, -1
+            for p in ckpts:
+                try:
+                    data = p.read_bytes()
+                except FileNotFoundError:
+                    continue  # GC'd between the scan and the open
+                return _unpack(data, skeleton), int(p.stem.split("_")[1])
+        return None, -1

@@ -589,6 +589,12 @@ class ControlPlane:
         if self.fault_node is not None:
             mon._node_faults.pop(self.fault_node, None)
             mon._silenced.add(self.fault_node)
-        return {"fault_t": self.fault_t,
-                "terms_tried": self.terms_this_fault,
-                "old_home": self.fault_node}
+        payload = {"fault_t": self.fault_t,
+                   "terms_tried": self.terms_this_fault,
+                   "old_home": self.fault_node}
+        if self._detected_t is not None:
+            # When the ack-watch *did* fire before the give-up, the ledger
+            # (and GoodPut accounting) can split the window into detection
+            # (fault -> suspicion) and leaderless (failed elections).
+            payload["detected_t"] = self._detected_t
+        return payload

@@ -47,6 +47,7 @@ from typing import Dict, Iterable, List, Optional, Tuple
 
 from repro.core import codec as wire_codec
 from repro.core.control import ControlPlane
+from repro.core.goodput import GoodputReport, SimCheckpointTier, goodput_report
 from repro.core.negotiation import InflightScaleOut, SimCluster
 from repro.core.topology import Link
 
@@ -57,7 +58,11 @@ EVENT_KINDS = ("join", "leave", "node-failure",
                # the scheduler node itself fails silently: the deputies'
                # ack-watch must detect it and elect a successor
                # (repro.core.control)
-               "scheduler-fault")
+               "scheduler-fault",
+               # trace-borne checkpoint request: force a push of the
+               # checkpoint tier *now* (recorded cadences replay verbatim);
+               # skipped when the backend runs without a tier
+               "checkpoint")
 
 #: floor for link-degrade rates: degrading to ≤ 0 Mbit/s would break the
 #: transfer-time model (divide by zero); severing is link-failure's job.
@@ -245,9 +250,18 @@ class SimBackend:
                  solver_charge_s=DEFAULT_SOLVER_CHARGE_S,
                  partial_credit: bool = True, detection_seed: int = 0,
                  detector: str = "phi",
-                 codec: str = wire_codec.CODEC_NONE):
+                 codec: str = wire_codec.CODEC_NONE,
+                 checkpoint: Optional[str] = None,
+                 ckpt_interval_s: Optional[float] = None,
+                 recovery: str = "replica",
+                 accounting: bool = False):
         self.cluster = cluster
         self.min_active = min_active
+        #: GoodPut accounting (repro.core.goodput): a pure post-hoc read of
+        #: the ledger — enabling it cannot change a ledger byte.
+        self.accounting = bool(accounting)
+        self.goodput: Optional[GoodputReport] = None
+        self._t_start = cluster.sim.now
         # Standing codec policy for state-bearing transfers; per-join trace
         # events may override it (ChurnEvent.codec). "none" replays every
         # pre-codec trace byte-identically.
@@ -286,6 +300,15 @@ class SimBackend:
         #: omniscient events arriving while leaderless: nobody can process a
         #: join/leave request until a successor is installed.
         self._parked: List[Tuple[int, ChurnEvent]] = []
+        # Checkpoint tier (repro.core.goodput): periodic pushes riding the
+        # network as contending transfers, churn-adaptive cadence, ledgered
+        # restore paths. None (the default) schedules nothing and writes no
+        # records — pre-checkpoint traces replay byte-identically.
+        self.ckpt: Optional[SimCheckpointTier] = None
+        if checkpoint is not None:
+            self.ckpt = SimCheckpointTier(self, cadence=checkpoint,
+                                          interval_s=ckpt_interval_s,
+                                          recovery=recovery)
 
     # -- engine protocol -----------------------------------------------------
 
@@ -318,6 +341,7 @@ class SimBackend:
             "link-fault": self._on_link_fault,
             "link-loss": self._on_link_loss,
             "scheduler-fault": self._on_scheduler_fault,
+            "checkpoint": self._on_checkpoint,
         }
         dispatch[ev.kind](seq, ev, ledger)
 
@@ -355,11 +379,13 @@ class SimBackend:
                 # No quorum anywhere by the deadline (minority partition
                 # side): the fail-over fails terminally and the cluster
                 # freezes — parked requests are refused, not forgotten.
+                detail = {"fault_t": expired["fault_t"],
+                          "terms_tried": expired["terms_tried"]}
+                if "detected_t" in expired:
+                    detail["detected_t"] = expired["detected_t"]
                 ledger.append(self._sched_fault_seq, sim.now,
                               "scheduler-fault", expired["old_home"],
-                              "election-no-quorum",
-                              {"fault_t": expired["fault_t"],
-                               "terms_tried": expired["terms_tried"]})
+                              "election-no-quorum", detail)
                 self._fault_seq.pop(("node", expired["old_home"]), None)
                 self._flush_parked_frozen(ledger)
             for kind, subject, fault_t in mon.expire_faults(sim.now):
@@ -368,7 +394,12 @@ class SimBackend:
                 seq = self._fault_seq.pop(key, -1)
                 ledger.append(seq, sim.now, kind, subject, "fault-undetected",
                               {"fault_t": fault_t})
+        if self.ckpt is not None:
+            self.ckpt.finalize(ledger)
         self._flush_parked_frozen(ledger)
+        if self.accounting:
+            self.goodput = goodput_report(ledger, t_start=self._t_start,
+                                          t_end=sim.now)
 
     def _flush_parked_frozen(self, ledger: EventLedger):
         """A frozen (no-quorum) cluster can never process parked requests:
@@ -418,6 +449,9 @@ class SimBackend:
                 if fl.codec != wire_codec.CODEC_NONE:
                     detail["codec"] = fl.codec
                     detail["wire_delivered_bytes"] = fl.wire_delivered_bytes()
+                    # Decode charge on the install critical path — the
+                    # "decode" BadPut category (repro.core.goodput).
+                    detail["decode_s"] = fl.decode_critical_s()
                 ledger.append(seq, res.timeline["ready"], "join",
                               fl.new_node, "ready", detail)
                 self.inflight.remove(fl)
@@ -525,6 +559,12 @@ class SimBackend:
                       {"blocking_s": res.delay_s, **det})
         # The departure may have severed in-flight shard streams.
         self._replan_touched(ledger, node=node)
+        if self.ckpt is not None:
+            # Credit a touched checkpoint push, drop holder state, and run
+            # the configured recovery path on failures. Detected failures
+            # were already counted as faults at injection time.
+            self.ckpt.on_node_event(seq, node, failure=failure,
+                                    omniscient=not det)
 
     def _on_link_join(self, seq: int, ev: ChurnEvent, ledger: EventLedger):
         u, v = ev.u, ev.v
@@ -584,6 +624,8 @@ class SimBackend:
                       "link-failed" if failure else "link-disconnected",
                       {"blocking_s": res.delay_s, **det})
         self._replan_touched(ledger, link=(u, v))
+        if self.ckpt is not None:
+            self.ckpt.on_link_event((u, v))
 
     def _on_link_degrade(self, seq: int, ev: ChurnEvent, ledger: EventLedger):
         """A link survives but its rate/latency changed (congestion, tc
@@ -609,6 +651,10 @@ class SimBackend:
             "latency_s": link.latency_s,
         })
         self._replan_touched(ledger, link=(u, v))
+        if self.ckpt is not None:
+            # The push's precomputed timing rode the old rate: cancel with
+            # credit and resume the missing bytes at the new one.
+            self.ckpt.on_link_event((u, v))
 
     # -- fault injection + monitor-driven detection ----------------------------
     #
@@ -644,6 +690,10 @@ class SimBackend:
                     r.handle.stall(now)
                 elif key is not None and self._route_uses_link(r.route, key):
                     r.handle.stall(now)
+        if self.ckpt is not None:
+            # Checkpoint pushes freeze under silent faults exactly like
+            # replication streams; detection cancels + credits the prefix.
+            self.ckpt.stall_if_touched(node=node, link=link)
 
     def _stall_faulted_streams(self, fl):
         """Streams *planned after* a silent fault die just as dead: the
@@ -685,6 +735,10 @@ class SimBackend:
         self._start_sweeps()
         self.sched.monitor.inject_node_fault(node)
         self._stall_touched(node=node)
+        if self.ckpt is not None:
+            # Node-failure arrivals feed the adaptive cadence; counted at
+            # injection (detection just reveals them later).
+            self.ckpt.note_fault()
         self._fault_seq[("node", node)] = seq
         ledger.append(seq, ev.t, ev.kind, node, "fault-injected")
 
@@ -752,10 +806,24 @@ class SimBackend:
         self.control.preferred_home = ev.new_home
         self.control.inject_scheduler_fault()
         self._stall_touched(node=home)
+        if self.ckpt is not None:
+            self.ckpt.note_fault()
         self._sched_fault_seq = seq
         self._fault_seq[("node", home)] = seq
         ledger.append(seq, ev.t, ev.kind, home, "fault-injected",
                       {"deputies": sorted(self.control.replicas)})
+
+    def _on_checkpoint(self, seq: int, ev: ChurnEvent, ledger: EventLedger):
+        """Trace-borne checkpoint request: recorded deployments carry their
+        real checkpoint instants, so replays reproduce the cadence instead
+        of re-deriving it from policy. Without a tier the event is a
+        no-op with a terminal record (trace parity)."""
+        subject = ev.node if ev.node is not None else self.sched.node
+        if self.ckpt is None:
+            ledger.append(seq, ev.t, ev.kind, subject,
+                          "ckpt-skipped-no-checkpointer")
+            return
+        self.ckpt.force_push(seq, ledger)
 
     def _defer_leaderless(self, seq: int, ev: ChurnEvent,
                           ledger: EventLedger):
@@ -783,6 +851,8 @@ class SimBackend:
                 return
             mon.inject_node_fault(node)
             self._stall_touched(node=node)
+            if self.ckpt is not None:
+                self.ckpt.note_fault()
             self._fault_seq[("node", node)] = seq
             ledger.append(seq, ev.t, ev.kind, node, "deferred-leaderless",
                           {"as": "node-fault"})
@@ -934,12 +1004,31 @@ def run_trace_sim(cluster: SimCluster, events: Iterable[ChurnEvent],
                   partial_credit: bool = True, detection_seed: int = 0,
                   detector: str = "phi",
                   codec: str = wire_codec.CODEC_NONE,
+                  checkpoint: Optional[str] = None,
+                  ckpt_interval_s: Optional[float] = None,
+                  recovery: str = "replica",
+                  accounting: bool = False,
                   ) -> Tuple[EventLedger, Dict[int, object]]:
     """Replay a churn trace through the engine on a simulated cluster."""
     engine = ChurnEngine(SimBackend(cluster, min_active=min_active,
                                     solver_charge_s=solver_charge_s,
                                     partial_credit=partial_credit,
                                     detection_seed=detection_seed,
-                                    detector=detector, codec=codec))
+                                    detector=detector, codec=codec,
+                                    checkpoint=checkpoint,
+                                    ckpt_interval_s=ckpt_interval_s,
+                                    recovery=recovery, accounting=accounting))
     ledger = engine.run(events)
     return ledger, engine.results
+
+
+def run_trace_goodput(cluster: SimCluster, events: Iterable[ChurnEvent],
+                      **kw) -> Tuple[EventLedger, Dict[int, object],
+                                     GoodputReport]:
+    """:func:`run_trace_sim` with accounting forced on; returns the
+    GoodPut report alongside the ledger and per-event results."""
+    kw["accounting"] = True
+    backend = SimBackend(cluster, **kw)
+    engine = ChurnEngine(backend)
+    ledger = engine.run(events)
+    return ledger, engine.results, backend.goodput

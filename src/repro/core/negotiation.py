@@ -134,6 +134,14 @@ class InflightScaleOut:
     def credited_wire_bytes(self) -> int:
         return sum(r.credited_wire for r in self.transfers)
 
+    def decode_critical_s(self) -> float:
+        """Largest decode charge among completed streams — the codec's
+        contribution to the install critical path (``finish_scale_out``
+        waits on ``done_t + decode_s`` per stream), ledgered on ``ready``
+        records as the "decode" BadPut category."""
+        return max((r.decode_s for r in self.transfers if r.handle.done),
+                   default=0.0)
+
     def pending(self) -> List[TransferRecord]:
         return [r for r in self.transfers
                 if not r.handle.cancelled and not r.handle.done]

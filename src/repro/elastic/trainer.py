@@ -95,6 +95,12 @@ class ElasticTrainer:
         self._step_times: Dict[int, list] = {}
         self.state = None
         self._seed = seed
+        # Recovery tiers (attach_recovery): the in-memory neighbor-replica
+        # store (fast tier) and the async disk checkpointer (cold tier).
+        # Both optional — a trainer without them behaves exactly as before.
+        self.replica_store = None
+        self.checkpointer = None
+        self._replica_owner = 0
 
     # -- mesh / shardings ------------------------------------------------------
 
@@ -306,6 +312,63 @@ class ElasticTrainer:
         self.events.append(ev)
         return ev
 
+    # -- recovery tiers (repro.checkpoint wired into the live trainer) ---------
+
+    def attach_recovery(self, *, replica_store=None, checkpointer=None,
+                        owner: int = 0):
+        """Wire the checkpoint layer in: a
+        :class:`~repro.checkpoint.memory_ckpt.MemoryReplicaStore` (fast
+        tier — neighbor replicas, sub-second restore) and/or an
+        :class:`~repro.checkpoint.async_ckpt.AsyncCheckpointer` (cold tier —
+        durable disk). ``owner`` keys the replica set (the coordinator's
+        trace node id)."""
+        self.replica_store = replica_store
+        self.checkpointer = checkpointer
+        self._replica_owner = int(owner)
+
+    def checkpoint(self, step: Optional[int] = None) -> dict:
+        """Push the current training state to every attached tier.
+
+        One host snapshot feeds both: the replica store shards it across the
+        active devices' effective links (Alg 1/2 balanced), the async
+        checkpointer writes it to disk off-thread. Returns which tiers took
+        the push — both restore paths must reproduce this state
+        bit-identically (tests/test_checkpoint_churn.py)."""
+        if self.replica_store is None and self.checkpointer is None:
+            raise RuntimeError("no recovery tier attached (attach_recovery)")
+        step = self.step_count if step is None else int(step)
+        host = jax.tree.map(np.asarray, self.state)
+        tiers = []
+        if self.replica_store is not None:
+            self.replica_store.push(self._replica_owner, step, host,
+                                    self.replication_neighbors())
+            tiers.append("replica")
+        if self.checkpointer is not None:
+            self.checkpointer.save(step, host)
+            tiers.append("checkpoint")
+        return {"step": step, "tiers": tiers}
+
+    def restore_from(self, tier: str) -> int:
+        """Reinstall training state from a recovery tier ("replica" or
+        "checkpoint"); returns the restored step. Both tiers round-trip the
+        exact bytes the matching :meth:`checkpoint` pushed, so A/B-ing them
+        must land bit-identical state."""
+        if tier == "replica":
+            if self.replica_store is None:
+                raise RuntimeError("no replica store attached")
+            tree, step = self.replica_store.restore(self._replica_owner)
+        elif tier == "checkpoint":
+            if self.checkpointer is None:
+                raise RuntimeError("no checkpointer attached")
+            self.checkpointer.wait()  # async writes must land before reads
+            tree, step = self.checkpointer.restore_latest(self.state)
+            if tree is None:
+                raise RuntimeError("no checkpoint on disk")
+        else:
+            raise ValueError(f"unknown recovery tier {tier!r}")
+        self.state = jax.device_put(tree, self._state_sharding())
+        return step
+
     # -- scenario replay (the unified churn pipeline) ---------------------------------
 
     def replay_scenario(self, events, *, batch_fn=None, steps_between: int = 1,
@@ -435,6 +498,23 @@ class TrainerBackend:
                 "old_home": old.id, "new_home": new.id, "shed": shed,
                 "n_active": len(tr.active), "detected": True,
             })
+            return
+        if ev.kind == "checkpoint":
+            # Trace-borne checkpoint request, mirroring SimBackend: push to
+            # the attached recovery tiers now, or acknowledge with a
+            # terminal skip so the trace stays diffable across substrates.
+            # getattr: trainer doubles in older tests predate the tiers.
+            coord = self.coordinator_device()
+            subject = (ev.node if ev.node is not None
+                       else (coord.id if coord is not None else -1))
+            if (getattr(tr, "replica_store", None) is None
+                    and getattr(tr, "checkpointer", None) is None):
+                ledger.append(seq, ev.t, ev.kind, subject,
+                              "ckpt-skipped-no-checkpointer")
+                return
+            info = tr.checkpoint()
+            ledger.append(seq, ev.t, ev.kind, subject, "ckpt-saved",
+                          {"step": info["step"], "tiers": info["tiers"]})
             return
         if ev.kind == "join":
             free = [d for d in tr.pool if d not in tr.active]

@@ -4,6 +4,7 @@ from repro.scenarios.generators import (
     GENERATORS,
     adversarial_churn,
     bandwidth_degradation,
+    checkpointed_training,
     detector_stress,
     diurnal_waves,
     flash_crowd,
@@ -24,6 +25,7 @@ __all__ = [
     "link_flaps",
     "adversarial_churn",
     "bandwidth_degradation",
+    "checkpointed_training",
     "silent_failures",
     "detector_stress",
     "scheduler_churn",

@@ -37,6 +37,11 @@ Catalog:
   (``scheduler-fault``) mid-scale-out: deputies must detect the missing
   heartbeat acks, elect a successor, re-adopt the in-flight replications
   from the replicated ledger, and serve the joins that arrived leaderless.
+* ``checkpointed_training`` — poisson crash churn plus trace-borne periodic
+  ``checkpoint`` push requests: the GoodPut A/B trace where fixed-cadence
+  pushes ride the same contended network as the failures they insure
+  against (checkpoint events are no-ops unless the engine runs with a
+  checkpoint tier attached).
 """
 from __future__ import annotations
 
@@ -543,6 +548,62 @@ def scheduler_churn(
                          })
 
 
+def checkpointed_training(
+    base_nodes: Sequence[int], *, seed: int, horizon_s: float,
+    ckpt_every_s: float = 20.0, rate_leave: float = 0.03,
+    failure_fraction: float = 1.0, rate_join: float = 0.02,
+    jitter_s: float = 0.5, max_links: int = 3,
+    bw_range=DEFAULT_BW_RANGE, lat_range=DEFAULT_LAT_RANGE,
+    compute_range=DEFAULT_COMPUTE_RANGE,
+) -> ScenarioTrace:
+    """Poisson crash churn with trace-borne periodic ``checkpoint`` events.
+
+    Every ``ckpt_every_s`` (± uniform ``jitter_s``) the trace requests a
+    checkpoint push: with a checkpoint tier attached the engine forwards it
+    to :meth:`SimCheckpointTier.force_push`, so the snapshot rides the same
+    contended links as the replications and failures around it; without a
+    tier each push request just ledgers ``ckpt-skipped-no-checkpointer``
+    and leaves the replay's behavior untouched. ``rate_leave``
+    departures are crashes with probability ``failure_fraction`` — the
+    events the checkpoints insure against."""
+    rng = random.Random(seed)
+    m = _Membership(base_nodes, rng)
+    events: List[ChurnEvent] = []
+    total = rate_join + rate_leave
+    t = 0.0
+    while total > 0:
+        t += rng.expovariate(total)
+        if t >= horizon_s:
+            break
+        if rng.random() < rate_join / total:
+            events.append(_join_event(t, m, rng, max_links=max_links,
+                                      bw_range=bw_range, lat_range=lat_range,
+                                      compute_range=compute_range))
+        else:
+            victim = m.pick_victim()
+            if victim is None:
+                continue
+            kind = ("node-failure" if rng.random() < failure_fraction
+                    else "leave")
+            events.append(ChurnEvent(t=t, kind=kind, node=victim))
+            m.leave(victim)
+    n_ckpts = 0
+    tc = ckpt_every_s
+    while tc < horizon_s:
+        events.append(ChurnEvent(t=tc + rng.uniform(-jitter_s, jitter_s),
+                                 kind="checkpoint"))
+        n_ckpts += 1
+        tc += ckpt_every_s
+    return ScenarioTrace("checkpointed-training", seed,
+                         sorted(events, key=lambda e: e.t), {
+                             "ckpt_every_s": ckpt_every_s,
+                             "n_ckpts": n_ckpts, "rate_join": rate_join,
+                             "rate_leave": rate_leave,
+                             "failure_fraction": failure_fraction,
+                             "horizon_s": horizon_s,
+                         })
+
+
 GENERATORS = {
     "poisson-churn": poisson_churn,
     "diurnal-waves": diurnal_waves,
@@ -554,4 +615,5 @@ GENERATORS = {
     "silent-failures": silent_failures,
     "detector-stress": detector_stress,
     "scheduler-churn": scheduler_churn,
+    "checkpointed-training": checkpointed_training,
 }

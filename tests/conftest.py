@@ -1,0 +1,45 @@
+"""Shared fixtures for the seeded-digest reproducibility suite.
+
+Every determinism test in this repo has the same skeleton: build a fresh
+cluster, replay a trace through ``run_trace_sim``, and compare the ledgers
+of independent replays byte-for-byte. These fixtures consolidate that
+skeleton so each test states only what varies — the cluster recipe (a
+zero-arg builder, fresh per replay) and the trace.
+"""
+import pytest
+
+from repro.core.engine import run_trace_sim
+
+
+@pytest.fixture
+def omniscient_digest():
+    """Factory: replay ``trace`` on a freshly built cluster and return the
+    ledger (whose ``.digest()`` / ``.canonical_bytes()`` are the replay's
+    byte-identity fingerprint). ``build`` must construct the cluster from
+    scratch on every call — digests are only meaningful across independent
+    replays. Extra keyword arguments flow to ``run_trace_sim``
+    (``codec=``, ``checkpoint=``, ``accounting=``, ...)."""
+
+    def _replay(build, trace, *, train_steps=1, **kw):
+        cl = build()
+        cl.train(train_steps)
+        ledger, _ = run_trace_sim(cl, trace, **kw)
+        return ledger
+
+    return _replay
+
+
+@pytest.fixture
+def same_seed_pair(omniscient_digest):
+    """Factory: replay the same (builder, trace) twice and assert the two
+    ledgers are byte-identical — the repo's core reproducibility contract.
+    Returns ``(l1, l2)`` for follow-on action/content asserts."""
+
+    def _pair(build, trace, *, train_steps=1, **kw):
+        l1 = omniscient_digest(build, trace, train_steps=train_steps, **kw)
+        l2 = omniscient_digest(build, trace, train_steps=train_steps, **kw)
+        assert l1.canonical_bytes() == l2.canonical_bytes()
+        assert l1.digest() == l2.digest()
+        return l1, l2
+
+    return _pair

@@ -1,0 +1,323 @@
+"""Checkpoint tier under churn: shard-aligned credit on cancelled pushes,
+restore A/B (replica vs checkpoint) down to bit-identical trainer state,
+adaptive cadence responding to measured fault arrivals, and the
+``AsyncCheckpointer`` restore/GC race regression."""
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import AsyncCheckpointer, MemoryReplicaStore
+from repro.core import Link, SimCluster, Topology
+from repro.core.engine import ChurnEvent, SimBackend, run_trace_sim
+from repro.core.goodput import CKPT_BASE_INTERVAL_S, SimCheckpointTier
+
+MB = 2 ** 20
+
+
+def _line_topology():
+    """0 —(100 Mbps)— 1, 0 —(50 Mbps)— 2: home 0's best direct link is to 1,
+    so the checkpoint tier's holder pick is deterministic."""
+    topo = Topology()
+    for n in (0, 1, 2):
+        topo.add_node(n, compute_s=1.0)
+    topo.add_link(0, 1, Link(100.0, 0.001))
+    topo.add_link(0, 2, Link(50.0, 0.001))
+    topo.add_link(1, 2, Link(100.0, 0.001))
+    return topo
+
+
+def _ckpt_cluster():
+    return SimCluster(_line_topology(), state_bytes=32 * MB,
+                      tensor_sizes=[1 * MB] * 32)
+
+
+def _records(ledger, action):
+    return [r for r in ledger if r.action == action]
+
+
+# ---------------------------------------------------------------------------
+# Partial credit: a push cancelled mid-stream keeps whole delivered shards.
+# ---------------------------------------------------------------------------
+
+
+def test_cancelled_push_gets_shard_aligned_credit():
+    cl = _ckpt_cluster()
+    cl.train(1)
+    t0 = cl.sim.now
+    # Push fires at t0+1, bytes flow from t0+1.25; degrading the 0–1 link
+    # one second into the stream cancels it with ~12 MB on the wire.
+    events = [ChurnEvent(t=t0 + 2.25, kind="link-degrade", u=0, v=1,
+                         bandwidth_mbps=10.0, latency_s=0.001)]
+    ledger, _ = run_trace_sim(cl, events, checkpoint="fixed",
+                              ckpt_interval_s=1.0)
+    cancelled = _records(ledger, "ckpt-cancelled")
+    assert cancelled, "the degrade must land mid-push"
+    d = cancelled[0].detail
+    assert 0 < d["credited_bytes"] <= d["delivered_bytes"]
+    assert d["credited_bytes"] % MB == 0  # whole shards only
+    # The resumed push starts from the credit, not from zero ...
+    resumed = [r for r in _records(ledger, "ckpt-started")
+               if r.detail["credited_bytes"] > 0]
+    assert resumed and resumed[0].detail["credited_bytes"] == d["credited_bytes"]
+    assert resumed[0].detail["bytes"] == 32 * MB - d["credited_bytes"]
+    # ... and every started push reached exactly one terminal record.
+    started = len(_records(ledger, "ckpt-started"))
+    terminal = len(cancelled) + len(_records(ledger, "ckpt-complete"))
+    assert started == terminal
+    assert _records(ledger, "ckpt-complete")  # the retry finished
+
+
+def test_holder_death_forfeits_credit():
+    cl = _ckpt_cluster()
+    cl.train(1)
+    t0 = cl.sim.now
+    events = [ChurnEvent(t=t0 + 2.25, kind="node-failure", node=1)]
+    ledger, _ = run_trace_sim(cl, events, checkpoint="fixed",
+                              ckpt_interval_s=1.0)
+    cancelled = _records(ledger, "ckpt-cancelled")
+    assert cancelled
+    d = cancelled[0].detail
+    assert d["holder"] == 1
+    assert d["delivered_bytes"] > 0
+    assert d["credited_bytes"] == 0  # bytes died with the holder
+
+
+def test_checkpoint_recovery_ledgers_restore_and_lost_window():
+    cl = _ckpt_cluster()
+    cl.train(1)
+    t0 = cl.sim.now
+    # Let one checkpoint complete (~t0+3.9), then crash non-holder node 2.
+    events = [ChurnEvent(t=t0 + 8.0, kind="node-failure", node=2)]
+    ledger, _ = run_trace_sim(cl, events, checkpoint="fixed",
+                              ckpt_interval_s=1.0, recovery="checkpoint")
+    assert _records(ledger, "ckpt-complete")
+    restored = _records(ledger, "ckpt-restored")
+    assert len(restored) == 1
+    d = restored[0].detail
+    assert d["holder"] == 1
+    assert d["restore_s"] > 0.0  # state re-streamed over the sim network
+    assert d["lost_from"] <= d["lost_to"]
+    assert d["lost_s"] == pytest.approx(d["lost_to"] - d["lost_from"])
+    assert not _records(ledger, "replica-restored")
+
+
+def test_replica_recovery_is_instant_and_lossless():
+    cl = _ckpt_cluster()
+    cl.train(1)
+    t0 = cl.sim.now
+    events = [ChurnEvent(t=t0 + 8.0, kind="node-failure", node=2)]
+    ledger, _ = run_trace_sim(cl, events, checkpoint="fixed",
+                              ckpt_interval_s=1.0, recovery="replica")
+    restored = _records(ledger, "replica-restored")
+    assert len(restored) == 1
+    assert restored[0].detail["restore_s"] == 0.0
+    assert restored[0].detail["lost_s"] == 0.0
+    assert not _records(ledger, "ckpt-restored")
+
+
+# ---------------------------------------------------------------------------
+# Trace-borne checkpoint events: forwarded to the tier, or skipped cleanly.
+# ---------------------------------------------------------------------------
+
+
+def test_trace_checkpoint_events_drive_the_tier():
+    from repro.scenarios import checkpointed_training
+
+    cl = _ckpt_cluster()
+    cl.train(1)
+    t0 = cl.sim.now
+    trace = checkpointed_training([0, 1, 2], seed=9, horizon_s=60.0,
+                                  ckpt_every_s=15.0, rate_leave=0.0,
+                                  rate_join=0.0)
+    events = [ChurnEvent(t=t0 + e.t, kind=e.kind, node=e.node)
+              for e in trace]
+    # With a tier attached the trace's push requests become real pushes
+    # (cadence fires disabled via a huge interval, so every push here is
+    # trace-driven) ...
+    ledger, _ = run_trace_sim(cl, events, checkpoint="fixed",
+                              ckpt_interval_s=10_000.0)
+    assert len(_records(ledger, "ckpt-started")) == len(events) == 3
+    # ... and without one, each request is a clean ledgered skip.
+    cl2 = _ckpt_cluster()
+    cl2.train(1)
+    ledger2, _ = run_trace_sim(cl2, events)
+    skips = _records(ledger2, "ckpt-skipped-no-checkpointer")
+    assert len(skips) == len(events)
+    assert not _records(ledger2, "ckpt-started")
+
+
+# ---------------------------------------------------------------------------
+# Adaptive cadence: interval shrinks as the measured fault rate grows.
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_interval_monotone_in_fault_rate():
+    cl = _ckpt_cluster()
+    cl.train(1)
+    be = SimBackend(cl, checkpoint="adaptive")
+    tier = be.ckpt
+    tier.t0 = tier.sim.now - 100.0  # 100 virtual seconds of history
+    assert tier.current_interval() == tier.base_interval_s  # prior = fixed
+    seen = []
+    for _ in range(5):
+        tier.note_fault()
+        seen.append(tier.current_interval())
+    assert all(a > b for a, b in zip(seen, seen[1:]))  # strictly shrinking
+    assert all(s <= tier.base_interval_s for s in seen)
+
+
+def test_fixed_cadence_ignores_fault_rate():
+    cl = _ckpt_cluster()
+    cl.train(1)
+    be = SimBackend(cl, checkpoint="fixed")
+    tier = be.ckpt
+    tier.t0 = tier.sim.now - 100.0
+    for _ in range(5):
+        tier.note_fault()
+    assert tier.current_interval() == CKPT_BASE_INTERVAL_S
+
+
+def test_tier_rejects_unknown_cadence_and_recovery():
+    cl = _ckpt_cluster()
+    cl.train(1)
+    be = SimBackend(cl)
+    with pytest.raises(ValueError):
+        SimCheckpointTier(be, cadence="hourly")
+    with pytest.raises(ValueError):
+        SimCheckpointTier(be, recovery="tape")
+
+
+# ---------------------------------------------------------------------------
+# Trainer recovery tiers: replica vs checkpoint restore, bit for bit.
+# ---------------------------------------------------------------------------
+
+
+def _tiny_trainer():
+    import jax
+    import jax.numpy as jnp
+    from repro.elastic import ElasticTrainer
+
+    tr = ElasticTrainer(None, devices=jax.devices()[:1], initial=1)
+    tr.state = {
+        "params": {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
+                   "b": jnp.full((8,), 0.25, jnp.float32)},
+        "opt": {"m": jnp.linspace(-1.0, 1.0, 64, dtype=jnp.float32)},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+    return tr
+
+
+def _leaves(tree):
+    import jax
+    return [np.asarray(x) for x in jax.tree.leaves(tree)]
+
+
+def test_replica_and_checkpoint_restore_bit_identical(tmp_path):
+    import jax
+    import jax.numpy as jnp
+
+    tr = _tiny_trainer()
+    store = MemoryReplicaStore()
+    ck = AsyncCheckpointer(tmp_path)
+    tr.attach_recovery(replica_store=store, checkpointer=ck, owner=0)
+    out = tr.checkpoint(step=7)
+    assert out == {"step": 7, "tiers": ["replica", "checkpoint"]}
+    golden = _leaves(tr.state)
+
+    def clobber():
+        tr.state = jax.tree.map(lambda x: jnp.zeros_like(x), tr.state)
+
+    clobber()
+    assert tr.restore_from("replica") == 7
+    from_replica = _leaves(tr.state)
+    clobber()
+    assert tr.restore_from("checkpoint") == 7
+    from_ckpt = _leaves(tr.state)
+    ck.close()
+
+    for g, a, b in zip(golden, from_replica, from_ckpt):
+        assert g.dtype == a.dtype == b.dtype
+        assert np.array_equal(g, a)
+        assert a.tobytes() == b.tobytes()  # the A/B acceptance: bit-identical
+
+
+def test_trainer_backend_checkpoint_event_saves_and_skips():
+    """The same trace `checkpoint` event drives both substrates: with a
+    tier attached it pushes the live state (`ckpt-saved`), without one it
+    resolves to the same terminal skip the simulator writes."""
+    tr = _tiny_trainer()
+    ledger = tr.replay_scenario([ChurnEvent(t=1.0, kind="checkpoint")],
+                                min_active=1)
+    assert ledger.actions() == ["ckpt-skipped-no-checkpointer"]
+    store = MemoryReplicaStore()
+    tr.attach_recovery(replica_store=store)
+    ledger = tr.replay_scenario([ChurnEvent(t=2.0, kind="checkpoint")],
+                                min_active=1)
+    assert ledger.actions() == ["ckpt-saved"]
+    assert next(iter(ledger)).detail["tiers"] == ["replica"]
+    tree, step = store.restore(0)
+    assert step == tr.step_count and tree is not None
+
+
+def test_restore_without_tier_raises():
+    tr = _tiny_trainer()
+    with pytest.raises(RuntimeError):
+        tr.checkpoint()
+    tr.attach_recovery(replica_store=MemoryReplicaStore())
+    with pytest.raises(RuntimeError):
+        tr.restore_from("checkpoint")
+    with pytest.raises(ValueError):
+        tr.restore_from("tape")
+
+
+# ---------------------------------------------------------------------------
+# AsyncCheckpointer restore/GC race (regression): latest() can name a file
+# the background _gc deletes before the open.
+# ---------------------------------------------------------------------------
+
+
+def test_restore_latest_survives_gc_race(tmp_path, monkeypatch):
+    ck = AsyncCheckpointer(tmp_path, keep=3)
+    for s in (1, 2):
+        ck.save(s, {"w": np.full(4, float(s), np.float32)})
+    ck.wait()
+    real = Path.read_bytes
+    raised = []
+
+    def flaky(self):
+        # The newest checkpoint vanishes between the scan and the open,
+        # exactly as a concurrent _gc would make it.
+        if self.name == "step_00000002.ckpt" and not raised:
+            raised.append(self)
+            raise FileNotFoundError(self)
+        return real(self)
+
+    monkeypatch.setattr(Path, "read_bytes", flaky)
+    tree, step = ck.restore_latest({"w": np.zeros(4, np.float32)})
+    assert raised  # the race actually happened
+    assert step == 1  # fell back to the surviving next-newest
+    assert np.array_equal(tree["w"], np.full(4, 1.0, np.float32))
+    ck.close()
+
+
+def test_restore_latest_all_candidates_vanish_returns_none(tmp_path, monkeypatch):
+    ck = AsyncCheckpointer(tmp_path, keep=3)
+    ck.save(1, {"w": np.zeros(2, np.float32)})
+    ck.wait()
+
+    def always_gone(self):
+        raise FileNotFoundError(self)
+
+    monkeypatch.setattr(Path, "read_bytes", always_gone)
+    tree, step = ck.restore_latest({"w": np.zeros(2, np.float32)})
+    assert tree is None and step == -1
+    monkeypatch.undo()
+    ck.close()
+
+
+def test_restore_latest_empty_dir(tmp_path):
+    ck = AsyncCheckpointer(tmp_path)
+    tree, step = ck.restore_latest({"w": np.zeros(2, np.float32)})
+    assert tree is None and step == -1
+    ck.close()

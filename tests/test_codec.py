@@ -157,37 +157,42 @@ def test_plan_int8_wire_undercuts_payload_shard_aligned():
 # ---------------------------------------------------------------------------
 
 
-def _churny_replay(codec=None, seed=0):
+def _churny_cluster(seed=0):
+    return SimCluster(random_edge_topology(16, seed=seed),
+                      state_bytes=32 * MB, tensor_sizes=[MB] * 32)
+
+
+def _churny_trace(seed=0):
     topo = random_edge_topology(16, seed=seed)
-    trace = poisson_churn(topo.active_nodes(), seed=seed + 3, horizon_s=600.0,
-                          rate_join=0.05, rate_leave=0.04)
-    cl = SimCluster(topo, state_bytes=32 * MB, tensor_sizes=[MB] * 32)
-    cl.train(1)
+    return poisson_churn(topo.active_nodes(), seed=seed + 3, horizon_s=600.0,
+                         rate_join=0.05, rate_leave=0.04)
+
+
+def _churny_replay(omniscient_digest, codec=None, seed=0):
     kw = {} if codec is None else {"codec": codec}
-    ledger, _ = run_trace_sim(cl, trace, **kw)
-    return ledger, cl
+    return omniscient_digest(lambda: _churny_cluster(seed),
+                             _churny_trace(seed), **kw)
 
 
-def test_codec_none_ledger_byte_identical_to_codec_less_engine():
+def test_codec_none_ledger_byte_identical_to_codec_less_engine(omniscient_digest):
     """The tentpole invariant: codec="none" reproduces the pre-codec ledger
     bytes exactly — same trace, same seed, a run that never mentions a
     codec vs one that passes codec="none" explicitly."""
-    l_default, _ = _churny_replay(codec=None)
-    l_none, _ = _churny_replay(codec="none")
+    l_default = _churny_replay(omniscient_digest, codec=None)
+    l_none = _churny_replay(omniscient_digest, codec="none")
     assert l_default.canonical_bytes() == l_none.canonical_bytes()
     assert l_default.digest() == l_none.digest()
     assert l_default.actions().count("ready") >= 3  # real work happened
 
 
-def test_codec_int8_same_seed_byte_identical():
-    l1, _ = _churny_replay(codec="int8")
-    l2, _ = _churny_replay(codec="int8")
-    assert l1.canonical_bytes() == l2.canonical_bytes()
+def test_codec_int8_same_seed_byte_identical(same_seed_pair):
+    same_seed_pair(lambda: _churny_cluster(0), _churny_trace(0),
+                   codec="int8")
 
 
-def test_codec_int8_ledger_carries_wire_fields_none_does_not():
-    l_none, _ = _churny_replay(codec="none")
-    l_int8, _ = _churny_replay(codec="int8")
+def test_codec_int8_ledger_carries_wire_fields_none_does_not(omniscient_digest):
+    l_none = _churny_replay(omniscient_digest, codec="none")
+    l_int8 = _churny_replay(omniscient_digest, codec="int8")
     none_started = [r for r in l_none if r.action == "scale-out-started"]
     int8_started = [r for r in l_int8 if r.action == "scale-out-started"]
     assert all("codec" not in r.detail for r in none_started)

@@ -379,6 +379,9 @@ def test_json_roundtrip_every_event_kind():
         # zero election_s is a value, not a request for the default.
         ChurnEvent(t=11.0, kind="scheduler-fault", node=0,
                    term=3, new_home=4, election_s=0.0),
+        # Trace-borne checkpoint push request: bare (node defaults to the
+        # scheduler at replay) — no extra fields on the wire.
+        ChurnEvent(t=12.0, kind="checkpoint"),
     ]
     from repro.core.engine import EVENT_KINDS
     assert {e.kind for e in events} == set(EVENT_KINDS)
@@ -434,25 +437,23 @@ def test_link_join_explicit_zero_latency_honored():
 # ---------------------------------------------------------------------------
 
 
-def _silent_ledger(seed=11):
+def _silent_trace(seed=11):
     from repro.scenarios import silent_failures
 
-    topo = random_edge_topology(10, seed=3)
-    trace = silent_failures(topo, seed=seed, horizon_s=30.0,
-                            n_node_faults=2, n_link_faults=2,
-                            n_lossy_links=1, loss_rate=0.6, n_joins=1)
-    cl = SimCluster(topo, state_bytes=16 * MB, tensor_sizes=[1 * MB] * 16)
-    cl.train(1)
-    ledger, _ = run_trace_sim(cl, trace)
-    return trace, ledger
+    return silent_failures(random_edge_topology(10, seed=3), seed=seed,
+                           horizon_s=30.0, n_node_faults=2, n_link_faults=2,
+                           n_lossy_links=1, loss_rate=0.6, n_joins=1)
 
 
-def test_same_seed_detected_run_byte_identical():
-    trace1, l1 = _silent_ledger()
-    trace2, l2 = _silent_ledger()
+def test_same_seed_detected_run_byte_identical(same_seed_pair):
+    trace1, trace2 = _silent_trace(), _silent_trace()
     assert [e.to_json() for e in trace1] == [e.to_json() for e in trace2]
-    assert l1.canonical_bytes() == l2.canonical_bytes()
-    assert l1.digest() == l2.digest()
+
+    def build():
+        return SimCluster(random_edge_topology(10, seed=3),
+                          state_bytes=16 * MB, tensor_sizes=[1 * MB] * 16)
+
+    l1, _ = same_seed_pair(build, trace1)
     # The run exercised real detection, not just skips.
     assert "fault-injected" in l1.actions()
     assert any(r.detail.get("detection_s") for r in l1)

@@ -147,32 +147,26 @@ def _big_trace():
                          rate_join=0.06, rate_leave=0.05)
 
 
-def _replay_big_trace(trace):
+def _big_cluster():
     topo = random_edge_topology(64, seed=0)
-    cl = SimCluster(topo, state_bytes=8 * MB, tensor_sizes=[256 * 1024] * 32,
-                    strategy="chaos")
-    cl.train(2)
-    ledger, _ = run_trace_sim(cl, trace)
-    return ledger
+    return SimCluster(topo, state_bytes=8 * MB,
+                      tensor_sizes=[256 * 1024] * 32, strategy="chaos")
 
 
-def test_trace_replay_deterministic_ledger():
+def test_trace_replay_deterministic_ledger(same_seed_pair):
     trace = _big_trace()
     assert len(trace) >= 200
-    l1 = _replay_big_trace(trace)
-    l2 = _replay_big_trace(trace)
-    assert l1.canonical_bytes() == l2.canonical_bytes()
-    assert l1.digest() == l2.digest()
+    l1, _ = same_seed_pair(_big_cluster, trace, train_steps=2)
     # The replay actually did protocol work, not just skipping.
     assert l1.actions().count("ready") >= 20
 
 
-def test_trace_replay_same_after_save_load(tmp_path):
+def test_trace_replay_same_after_save_load(tmp_path, omniscient_digest):
     trace = _big_trace()
     p = tmp_path / "trace.jsonl"
     trace.save(p)
-    l1 = _replay_big_trace(trace)
-    l2 = _replay_big_trace(ScenarioTrace.load(p))
+    l1 = omniscient_digest(_big_cluster, trace, train_steps=2)
+    l2 = omniscient_digest(_big_cluster, ScenarioTrace.load(p), train_steps=2)
     assert l1.canonical_bytes() == l2.canonical_bytes()
 
 

@@ -115,47 +115,36 @@ def test_scheduler_fault_on_non_home_node_is_skipped():
 # ---------------------------------------------------------------------------
 
 
-def _churn_ledger(seed=5):
-    topo = random_edge_topology(9, seed=2)
-    trace = scheduler_churn(topo, seed=seed, horizon_s=40.0, t_fault=12.0,
-                            n_joins_before=2, n_joins_after=1)
-    cl = SimCluster(topo, state_bytes=48 * MB, tensor_sizes=[1 * MB] * 48)
-    cl.train(1)
-    ledger, _ = run_trace_sim(cl, trace)
-    return trace, ledger
+def _failover_cluster():
+    return SimCluster(random_edge_topology(9, seed=2),
+                      state_bytes=48 * MB, tensor_sizes=[1 * MB] * 48)
 
 
-def test_same_seed_scheduler_churn_byte_identical():
-    t1, l1 = _churn_ledger()
-    t2, l2 = _churn_ledger()
+def _failover_trace(seed=5, **kw):
+    kw.setdefault("n_joins_before", 2)
+    kw.setdefault("n_joins_after", 1)
+    return scheduler_churn(random_edge_topology(9, seed=2), seed=seed,
+                           horizon_s=40.0, t_fault=12.0, **kw)
+
+
+def test_same_seed_scheduler_churn_byte_identical(same_seed_pair):
+    t1, t2 = _failover_trace(), _failover_trace()
     assert [e.to_json() for e in t1] == [e.to_json() for e in t2]
-    assert l1.canonical_bytes() == l2.canonical_bytes()
+    l1, _ = same_seed_pair(_failover_cluster, t1)
     actions = l1.actions()
     assert "fault-injected" in actions
     assert "failover" in actions
     assert "ready" in actions
 
 
-def test_same_trace_object_replays_byte_identical():
+def test_same_trace_object_replays_byte_identical(same_seed_pair):
     """Replaying the SAME in-memory trace (with a fail-over and parked
     leaderless events) twice must not diverge: the engine may never
     mutate the caller's events."""
-    topo_seed, trace = 2, None
-    trace = scheduler_churn(random_edge_topology(9, seed=topo_seed),
-                            seed=5, horizon_s=40.0, t_fault=12.0,
-                            n_joins_before=1, n_joins_after=2)
+    trace = _failover_trace(n_joins_before=1, n_joins_after=2)
     wire_before = [e.to_json() for e in trace]
-
-    def replay():
-        cl = SimCluster(random_edge_topology(9, seed=topo_seed),
-                        state_bytes=48 * MB, tensor_sizes=[1 * MB] * 48)
-        cl.train(1)
-        ledger, _ = run_trace_sim(cl, trace)
-        return ledger
-
-    l1, l2 = replay(), replay()
+    l1, _ = same_seed_pair(_failover_cluster, trace)
     assert [e.to_json() for e in trace] == wire_before  # events untouched
-    assert l1.canonical_bytes() == l2.canonical_bytes()
     assert "failover" in l1.actions()
 
 

@@ -1,0 +1,207 @@
+"""GoodPut/BadPut accounting invariants (the PR's lock-down suite).
+
+Three contracts, cross-substrate where they apply:
+
+1. **Conservation** — every category's seconds plus productive time sum to
+   the wall-clock window, on every generator family (accounting never
+   invents or loses time).
+2. **Determinism** — same seed ⇒ byte-identical report JSON, with and
+   without a checkpoint tier in the loop.
+3. **Non-interference** — turning accounting on (a pure post-hoc ledger
+   read) leaves omniscient replay ledgers byte-identical; the checkpoint
+   tier is off by default and writes nothing.
+"""
+import json
+import math
+
+import pytest
+
+from repro.core import SimCluster, random_edge_topology
+from repro.core.engine import run_trace_goodput, run_trace_sim
+from repro.core.goodput import (
+    CATEGORIES,
+    GoodputReport,
+    classify,
+    goodput_report,
+    optimal_interval,
+)
+from repro.scenarios import (
+    detector_stress,
+    diurnal_waves,
+    poisson_churn,
+    regional_partition,
+    scheduler_churn,
+)
+
+MB = 2 ** 20
+
+
+def _cluster(n=10, seed=3, state=16 * MB, tensors=16):
+    return SimCluster(random_edge_topology(n, seed=seed),
+                      state_bytes=state, tensor_sizes=[MB] * tensors)
+
+
+def _traces():
+    """One trace per generator family named by the issue."""
+    topo = random_edge_topology(10, seed=3)
+    nodes = topo.active_nodes()
+    return {
+        "poisson": poisson_churn(nodes, seed=7, horizon_s=120.0,
+                                 rate_join=0.05, rate_leave=0.04),
+        "diurnal": diurnal_waves(nodes, seed=7, horizon_s=120.0,
+                                 period_s=60.0, peak_rate=0.08),
+        "partition": regional_partition(topo, seed=7, t_cut=20.0,
+                                        heal_after_s=30.0),
+        "detector_stress": detector_stress(topo, seed=7, horizon_s=60.0),
+        "scheduler_churn": scheduler_churn(topo, seed=7, horizon_s=60.0),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Conservation: components sum to wall-clock on every generator family.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["poisson", "diurnal", "partition",
+                                  "detector_stress", "scheduler_churn"])
+def test_components_sum_to_wall_clock(name):
+    trace = _traces()[name]
+    cl = _cluster()
+    cl.train(1)
+    ledger, _, report = run_trace_goodput(cl, trace)
+    assert set(report.components) == set(CATEGORIES)
+    assert all(v >= 0.0 for v in report.components.values())
+    total = math.fsum(report.components.values())
+    assert total == pytest.approx(report.total_s, abs=1e-6)
+    assert report.goodput_s + report.badput_s == pytest.approx(
+        report.total_s, abs=1e-6)
+    assert 0.0 <= report.goodput_fraction <= 1.0
+
+
+def test_components_sum_with_checkpoint_tier_active():
+    """Conservation holds when checkpoint pushes/restores are in the mix
+    (the categories the tier adds: checkpoint, lost)."""
+    trace = _traces()["poisson"]
+    cl = _cluster()
+    cl.train(1)
+    ledger, _, report = run_trace_goodput(
+        cl, trace, checkpoint="adaptive", recovery="checkpoint")
+    assert math.fsum(report.components.values()) == pytest.approx(
+        report.total_s, abs=1e-6)
+    assert "ckpt-started" in ledger.actions()
+    # Every started push reached exactly one terminal record.
+    started = sum(1 for r in ledger if r.action == "ckpt-started")
+    done = sum(1 for r in ledger
+               if r.action in ("ckpt-complete", "ckpt-cancelled"))
+    assert started == done > 0
+
+
+# ---------------------------------------------------------------------------
+# Determinism: same seed ⇒ byte-identical report JSON.
+# ---------------------------------------------------------------------------
+
+
+def _report_json(checkpoint=None, recovery="replica"):
+    trace = _traces()["poisson"]
+    cl = _cluster()
+    cl.train(1)
+    kw = {} if checkpoint is None else {"checkpoint": checkpoint,
+                                        "recovery": recovery}
+    _, _, report = run_trace_goodput(cl, trace, **kw)
+    return json.dumps(report.to_json(), sort_keys=True)
+
+
+@pytest.mark.parametrize("checkpoint,recovery", [
+    (None, "replica"),
+    ("fixed", "checkpoint"),
+    ("adaptive", "checkpoint"),
+])
+def test_same_seed_report_byte_identical(checkpoint, recovery):
+    assert _report_json(checkpoint, recovery) == _report_json(checkpoint,
+                                                              recovery)
+
+
+# ---------------------------------------------------------------------------
+# Non-interference: accounting on == accounting off, byte for byte.
+# ---------------------------------------------------------------------------
+
+
+def test_accounting_leaves_omniscient_digest_unchanged(omniscient_digest):
+    """The acceptance criterion: an omniscient poisson replay produces the
+    same ledger bytes whether or not the accountant reads them afterwards
+    (accounting is a pure post-hoc ledger read; the checkpoint tier stays
+    detached unless requested)."""
+    trace = _traces()["poisson"]
+    l_plain = omniscient_digest(_cluster, trace)
+    l_acct = omniscient_digest(_cluster, trace, accounting=True)
+    assert l_plain.canonical_bytes() == l_acct.canonical_bytes()
+    assert l_plain.digest() == l_acct.digest()
+    assert l_plain.actions().count("ready") >= 1  # real work happened
+
+
+def test_no_checkpoint_records_without_tier():
+    trace = _traces()["poisson"]
+    cl = _cluster()
+    cl.train(1)
+    ledger, _ = run_trace_sim(cl, trace)
+    assert not any(r.action.startswith("ckpt-") for r in ledger)
+
+
+# ---------------------------------------------------------------------------
+# Classifier unit behavior: priority resolution and clamping.
+# ---------------------------------------------------------------------------
+
+
+def test_classify_overlap_resolves_by_priority():
+    # Detection outranks handling; the overlap is charged to detection only.
+    comps = classify([(1.0, 3.0, "detection"), (2.0, 5.0, "handling")],
+                     t_start=0.0, t_end=10.0)
+    assert comps["detection"] == pytest.approx(2.0)
+    assert comps["handling"] == pytest.approx(2.0)  # 3.0..5.0 remainder
+    assert comps["productive"] == pytest.approx(6.0)
+    assert math.fsum(comps.values()) == pytest.approx(10.0)
+
+
+def test_classify_clamps_to_window():
+    comps = classify([(-5.0, 2.0, "detection"), (8.0, 99.0, "checkpoint")],
+                     t_start=0.0, t_end=10.0)
+    assert comps["detection"] == pytest.approx(2.0)
+    assert comps["checkpoint"] == pytest.approx(2.0)
+    assert math.fsum(comps.values()) == pytest.approx(10.0)
+
+
+def test_empty_ledger_is_all_productive():
+    report = GoodputReport(t_start=0.0, t_end=5.0,
+                           components=classify([], t_start=0.0, t_end=5.0))
+    assert report.goodput_fraction == pytest.approx(1.0)
+    assert report.badput_s == pytest.approx(0.0)
+
+
+def test_report_json_round_trips_and_is_sorted():
+    trace = _traces()["scheduler_churn"]
+    cl = _cluster()
+    cl.train(1)
+    _, _, report = run_trace_goodput(cl, trace)
+    d = report.to_json()
+    assert list(d["components"]) == sorted(d["components"])
+    assert json.loads(json.dumps(d, sort_keys=True)) == d
+
+
+# ---------------------------------------------------------------------------
+# Cadence formula: the policy math independent of any simulation.
+# ---------------------------------------------------------------------------
+
+
+def test_optimal_interval_is_unicron_sqrt():
+    assert optimal_interval(2.0, 0.01, lo=1.0, hi=600.0) == pytest.approx(
+        math.sqrt(2 * 2.0 / 0.01))
+
+
+def test_optimal_interval_degenerate_inputs_hit_ceiling():
+    assert optimal_interval(0.0, 0.5, lo=1.0, hi=600.0) == 600.0
+    assert optimal_interval(1.0, 0.0, lo=1.0, hi=600.0) == 600.0
+
+
+def test_optimal_interval_clamped():
+    assert optimal_interval(1e-9, 1e3, lo=1.0, hi=600.0) == 1.0
+    assert optimal_interval(1e6, 1e-9, lo=1.0, hi=600.0) == 600.0

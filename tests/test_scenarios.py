@@ -9,6 +9,7 @@ from repro.scenarios import (
     ScenarioTrace,
     adversarial_churn,
     bandwidth_degradation,
+    checkpointed_training,
     diurnal_waves,
     flash_crowd,
     link_flaps,
@@ -33,8 +34,25 @@ def test_generators_are_seed_deterministic():
         lambda: adversarial_churn(nodes, seed=5, horizon_s=600.0, n_joins=6),
         lambda: bandwidth_degradation(nodes, seed=5, horizon_s=600.0,
                                       n_joins=5, restore_after_s=10.0),
+        lambda: checkpointed_training(nodes, seed=5, horizon_s=600.0),
     ):
         assert _jsons(mk()) == _jsons(mk())
+
+
+def test_checkpointed_training_mixes_pushes_with_crashes():
+    topo = random_edge_topology(16, seed=3)
+    trace = checkpointed_training(topo.active_nodes(), seed=5,
+                                  horizon_s=200.0, ckpt_every_s=20.0,
+                                  jitter_s=0.5)
+    kinds = trace.kinds()
+    assert kinds.get("checkpoint") == trace.meta["n_ckpts"] == 9
+    assert kinds.get("node-failure", 0) >= 1  # the events the pushes insure
+    ts = [e.t for e in trace.events]
+    assert ts == sorted(ts)
+    # Checkpoint requests land near their nominal cadence.
+    cts = sorted(e.t for e in trace.events if e.kind == "checkpoint")
+    for i, t in enumerate(cts, start=1):
+        assert abs(t - 20.0 * i) <= 0.5
 
 
 def test_trace_save_load_roundtrip(tmp_path):

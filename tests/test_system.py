@@ -42,6 +42,7 @@ def test_long_500k_skip_policy():
     assert runs == {"rwkv6-1.6b", "zamba2-1.2b"}
 
 
+@pytest.mark.slow
 def test_end_to_end_train_scale_checkpoint_restore(tmp_path):
     """The full story on one device: train → node joins (Chaos plan + real
     replication of the live state) → keep training → checkpoint → crash →
