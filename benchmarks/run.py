@@ -15,6 +15,7 @@ BENCHMARKS = [
     ("failover_delay", "benchmarks.failover_delay"),
     ("replication_codec", "benchmarks.replication_codec"),
     ("goodput", "benchmarks.goodput"),
+    ("resharding", "benchmarks.resharding"),
     ("fig10_idle_time", "benchmarks.idle_time"),
     ("fig11_14_convergence", "benchmarks.convergence"),
     ("fig15_replication_ablation", "benchmarks.replication_ablation"),

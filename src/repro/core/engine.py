@@ -49,6 +49,15 @@ from repro.core import codec as wire_codec
 from repro.core.control import ControlPlane
 from repro.core.goodput import GoodputReport, SimCheckpointTier, goodput_report
 from repro.core.negotiation import InflightScaleOut, SimCluster
+from repro.core.plans import (
+    RESHARD_MODES,
+    ParallelismPlan,
+    ReshardPolicy,
+    decide_reshard,
+    default_reshard_policy,
+    reshard_moved_bytes,
+    reshard_plan,
+)
 from repro.core.topology import Link
 
 EVENT_KINDS = ("join", "leave", "node-failure",
@@ -94,10 +103,21 @@ class ChurnEvent:
     #: repro.core.codec): this join's replication runs under the given
     #: policy instead of the backend's standing one. None = backend default.
     codec: Optional[str] = None
+    #: parallelism-plan resharding annotations (join / leave / node-failure):
+    #: ``reshard`` overrides the backend's standing reshard mode for the
+    #: membership change this event causes ("never"/"auto"/"always");
+    #: ``new_shape`` pins the target (dp, tp) when it matches the surviving
+    #: device count; ``old_shape`` is carried by recorded traces so a replay
+    #: can assert the layout it reshaped away from. None = backend default.
+    reshard: Optional[str] = None
+    old_shape: Optional[Tuple[int, ...]] = None
+    new_shape: Optional[Tuple[int, ...]] = None
 
     def __post_init__(self):
         if self.kind not in EVENT_KINDS:
             raise ValueError(f"unknown churn event kind {self.kind!r}")
+        if self.reshard is not None and self.reshard not in RESHARD_MODES:
+            raise ValueError(f"unknown reshard mode {self.reshard!r}")
 
     def to_json(self) -> dict:
         # Every field serializes on `is None` checks (not truthiness), so an
@@ -125,6 +145,12 @@ class ChurnEvent:
             out["election_s"] = self.election_s
         if self.codec is not None:
             out["codec"] = self.codec
+        if self.reshard is not None:
+            out["reshard"] = self.reshard
+        if self.old_shape is not None:
+            out["old_shape"] = [int(s) for s in self.old_shape]
+        if self.new_shape is not None:
+            out["new_shape"] = [int(s) for s in self.new_shape]
         return out
 
     @classmethod
@@ -139,7 +165,12 @@ class ChurnEvent:
                    latency_s=d.get("latency_s"),
                    loss_rate=d.get("loss_rate"),
                    term=d.get("term"), new_home=d.get("new_home"),
-                   election_s=d.get("election_s"), codec=d.get("codec"))
+                   election_s=d.get("election_s"), codec=d.get("codec"),
+                   reshard=d.get("reshard"),
+                   old_shape=(tuple(int(s) for s in d["old_shape"])
+                              if "old_shape" in d else None),
+                   new_shape=(tuple(int(s) for s in d["new_shape"])
+                              if "new_shape" in d else None))
 
     def link_objects(self) -> Dict[int, Link]:
         return {p: Link(bw, lat) for p, (bw, lat) in (self.links or {}).items()}
@@ -254,7 +285,9 @@ class SimBackend:
                  checkpoint: Optional[str] = None,
                  ckpt_interval_s: Optional[float] = None,
                  recovery: str = "replica",
-                 accounting: bool = False):
+                 accounting: bool = False,
+                 reshard: str = "never",
+                 reshard_policy: Optional[ReshardPolicy] = None):
         self.cluster = cluster
         self.min_active = min_active
         #: GoodPut accounting (repro.core.goodput): a pure post-hoc read of
@@ -309,6 +342,20 @@ class SimBackend:
             self.ckpt = SimCheckpointTier(self, cadence=checkpoint,
                                           interval_s=ckpt_interval_s,
                                           recovery=recovery)
+        # Parallelism-plan resharding (ElasWave): membership changes may
+        # reshape the (dp, tp) layout instead of re-replicating into the old
+        # one. ``"never"`` (the default) leaves ``self.plan`` None — the
+        # implicit pure-DP full-replica layout — and writes no records, so
+        # every pre-reshard trace replays byte-identically.
+        if reshard not in RESHARD_MODES:
+            raise ValueError(f"unknown reshard mode {reshard!r}")
+        self.reshard_mode = reshard
+        self.reshard_policy = (reshard_policy if reshard_policy is not None
+                               else default_reshard_policy(
+                                   reshard, cluster.state_bytes))
+        self.plan: Optional[ParallelismPlan] = None
+        self._reshard: Optional[dict] = None  # one in-flight reshard at a time
+        self._join_reshard: Dict[int, Tuple] = {}  # node -> (mode, new_shape)
 
     # -- engine protocol -----------------------------------------------------
 
@@ -369,6 +416,11 @@ class SimBackend:
                                     self.control.detection_horizon())
                         if h is not None]
             if not horizons:
+                if sim._live:
+                    # _pump itself scheduled real work (a membership change
+                    # completing at drain time can *start* a reshard, whose
+                    # fetch streams are new live transfers) — keep draining.
+                    continue
                 break
             horizon = min(horizons)
             step_to = min(max(horizon, sim.now), sim.now + mon.drain_step_s())
@@ -455,6 +507,181 @@ class SimBackend:
                 ledger.append(seq, res.timeline["ready"], "join",
                               fl.new_node, "ready", detail)
                 self.inflight.remove(fl)
+                # The join changed active membership: a layout change may
+                # now pay off (and any in-flight reshard planned against
+                # the smaller cluster is stale).
+                mode, pinned = self._join_reshard.pop(fl.new_node,
+                                                      (None, None))
+                self._cancel_reshard(ledger, "membership-changed")
+                self._after_membership_change(seq, ledger, mode, pinned)
+        self._finalize_reshard(ledger)
+
+    # -- parallelism-plan resharding (ElasWave) --------------------------------
+    #
+    # ``self.plan`` is the cluster's current ParallelismPlan; None means the
+    # implicit pure-DP layout every pre-reshard trace ran under (all members
+    # hold the full state). A membership change evaluates the divisor chain
+    # of surviving shapes via the shared ``decide_reshard`` policy; a "go"
+    # emits ``reshard-started``, schedules the interval-delta fetches through
+    # the same credited stream machinery as scale-out, and ``reshard-ready``
+    # lands when the last fetch installs. Membership churn mid-reshard
+    # cancels the whole reshard (holdings conservatively stay at the old
+    # layout); link churn re-plans only the touched fetches with credit.
+
+    def _reshard_fls(self) -> List[InflightScaleOut]:
+        return (list(self._reshard["fls"].values())
+                if self._reshard is not None else [])
+
+    def _after_membership_change(self, seq: int, ledger: EventLedger,
+                                 mode: Optional[str],
+                                 pinned_shape) -> None:
+        mode = self.reshard_mode if mode is None else mode
+        if mode == "never" and (self.plan is None or self.plan.tp == 1):
+            return  # pre-reshard path: no plan state, no records
+        devices = sorted(self.topo.active_nodes())
+        if not devices:
+            return
+        decision, baseline = decide_reshard(
+            self.reshard_policy, self.plan, devices,
+            self.cluster.state_bytes, self.cluster.tensor_sizes,
+            mode=mode, pinned_shape=pinned_shape)
+        if decision is None:
+            if self.plan is not None and self.plan.tp > 1:
+                # mode "never" while sharded: the layout must still fall
+                # back to replicate-only — survivors' intervals moved.
+                decision = {
+                    "plan": baseline,
+                    "step_s": self.reshard_policy.step_time(
+                        baseline, self.cluster.state_bytes,
+                        self.cluster.tensor_sizes),
+                    "baseline_step_s": self.reshard_policy.step_time(
+                        baseline, self.cluster.state_bytes,
+                        self.cluster.tensor_sizes),
+                    "moved_bytes": reshard_moved_bytes(
+                        self.plan, baseline, self.cluster.state_bytes),
+                    "old_shape": self.plan.signature(),
+                    "new_shape": baseline.signature(),
+                }
+            else:
+                if self.plan is not None:
+                    self.plan = baseline  # refresh device membership
+                return
+        self._start_reshard(seq, decision, ledger)
+
+    def _start_reshard(self, seq: int, decision: dict, ledger: EventLedger):
+        now = self.cluster.sim.now
+        cand: ParallelismPlan = decision["plan"]
+        rp = reshard_plan(self.plan, cand, self.topo,
+                          self.cluster.state_bytes, codec=self.sched.codec)
+        detail = {
+            "old_shape": decision["old_shape"],
+            "new_shape": decision["new_shape"],
+            "moved_bytes": decision["moved_bytes"],
+            "step_s": decision["step_s"],
+            "baseline_step_s": decision["baseline_step_s"],
+            "n_fetches": len(rp.fetches),
+        }
+        if rp.lost_bytes:
+            detail["lost_bytes"] = rp.lost_bytes
+        ledger.append(seq, now, "reshard", self.sched.node,
+                      "reshard-started", detail)
+        if not rp.fetches:
+            # Nothing to move (e.g. DP → TP: every interval is a subset of
+            # the full replicas): the layout swaps after the solver charge
+            # + policy swap alone.
+            solver_s = (self.sched.solver_time_model
+                        if self.sched.solver_time_model is not None
+                        else self.DEFAULT_SOLVER_CHARGE_S)
+            t_ready = now + solver_s + self.sched._update_sync_policy()
+            self.plan = cand
+            ledger.append(seq, t_ready, "reshard", self.sched.node,
+                          "reshard-ready",
+                          {"old_shape": decision["old_shape"],
+                           "new_shape": decision["new_shape"],
+                           "moved_bytes": decision["moved_bytes"]})
+            return
+        solver_s = (self.sched.solver_time_model
+                    if self.sched.solver_time_model is not None
+                    else self.DEFAULT_SOLVER_CHARGE_S)
+        targets = set()
+        for node, plan in rp.fetches.items():
+            targets.add(node)
+            targets.update(plan.sources)
+        policy_dist = max((self.sched._control_rtt(self.sched.node, u) / 2
+                           for u in sorted(targets)), default=0.0)
+        t_start = now + solver_s + policy_dist
+        fls = {}
+        for node, plan in sorted(rp.fetches.items()):
+            fl = self.sched.begin_reshard_fetch(node, plan, t_start)
+            self._stall_faulted_streams(fl)
+            fls[node] = fl
+        self._reshard = {"seq": seq, "fls": fls, "new": cand,
+                         "decision": decision}
+
+    def _finalize_reshard(self, ledger: EventLedger):
+        rs = self._reshard
+        if rs is None or not all(fl.complete for fl in rs["fls"].values()):
+            return
+        t_done = max(self.sched.finish_reshard_fetch(fl)
+                     for fl in rs["fls"].values())
+        t_ready = max(t_done, self.cluster.sim.now) \
+            + self.sched._update_sync_policy()
+        self.plan = rs["new"]
+        d = rs["decision"]
+        ledger.append(rs["seq"], t_ready, "reshard", self.sched.node,
+                      "reshard-ready", {"old_shape": d["old_shape"],
+                                        "new_shape": d["new_shape"],
+                                        "moved_bytes": d["moved_bytes"]})
+        self._reshard = None
+
+    def _cancel_reshard(self, ledger: EventLedger, reason: str):
+        rs = self._reshard
+        if rs is None:
+            return
+        for fl in rs["fls"].values():
+            self.sched.cancel_reshard_fetch(fl)
+        d = rs["decision"]
+        ledger.append(rs["seq"], self.cluster.sim.now, "reshard",
+                      self.sched.node, "reshard-cancelled", {
+                          "reason": reason,
+                          "old_shape": d["old_shape"],
+                          "new_shape": d["new_shape"],
+                          "delivered_bytes": sum(
+                              fl.delivered_bytes()
+                              for fl in rs["fls"].values()),
+                      })
+        # Holdings conservatively stay at the old layout (self.plan); the
+        # next membership evaluation re-plans from there.
+        self._reshard = None
+
+    def _replan_reshard_touched(self, ledger: EventLedger, *,
+                                node=None, link=None):
+        """Link churn invalidated reshard fetch streams: credit + re-plan
+        each touched fetch (membership churn cancels the whole reshard
+        instead — see ``_cancel_reshard``). A fetching node with no
+        surviving route kills the reshard: ``replan_scale_out``'s abort
+        path would deactivate a live member, so it must never run here."""
+        rs = self._reshard
+        if rs is None:
+            return
+        for fnode, fl in sorted(rs["fls"].items()):
+            touched = ((node is not None and fl.uses_node(node))
+                       or (link is not None and fl.uses_link(*link)))
+            if not touched:
+                continue
+            if not self.topo.neighbors(fnode):
+                self._cancel_reshard(ledger, "no-route")
+                return
+            self.sched.replan_scale_out(fl)
+            delivered = fl.delivered_bytes()
+            ledger.append(rs["seq"], self.cluster.sim.now, "reshard", fnode,
+                          "reshard-replanned", {
+                              "replans": fl.replans,
+                              "delivered_bytes": delivered,
+                              "credited_bytes": fl.credited_bytes(),
+                              "replanned_bytes": max(
+                                  0, fl.state_bytes - delivered),
+                          })
 
     def _replan_touched(self, ledger: EventLedger, *, node=None, link=None):
         """Re-plan (or abort) in-flight replications invalidated by churn.
@@ -513,6 +740,10 @@ class SimBackend:
         self._stall_faulted_streams(fl)
         self.inflight.append(fl)
         self._inflight_seq[node] = seq
+        # Reshard evaluation happens when the join *completes* (membership
+        # changes at activation, not at request) — stash the event's
+        # per-event overrides until then.
+        self._join_reshard[node] = (ev.reshard, ev.new_shape)
         detail = {
             "peers": sorted(links),
             "plan": fl.plan.summary(),
@@ -557,6 +788,9 @@ class SimBackend:
         ledger.append(seq, ev.t, ev.kind, node,
                       "node-failed" if failure else "scaled-in",
                       {"blocking_s": res.delay_s, **det})
+        # Membership changed: an in-flight reshard was planned against the
+        # old membership and is stale in full.
+        self._cancel_reshard(ledger, "membership-changed")
         # The departure may have severed in-flight shard streams.
         self._replan_touched(ledger, node=node)
         if self.ckpt is not None:
@@ -565,6 +799,7 @@ class SimBackend:
             # were already counted as faults at injection time.
             self.ckpt.on_node_event(seq, node, failure=failure,
                                     omniscient=not det)
+        self._after_membership_change(seq, ledger, ev.reshard, ev.new_shape)
 
     def _on_link_join(self, seq: int, ev: ChurnEvent, ledger: EventLedger):
         u, v = ev.u, ev.v
@@ -595,6 +830,7 @@ class SimBackend:
                     "latency_s": link.latency_s,
                 })
                 self._replan_touched(ledger, link=(u, v))
+                self._replan_reshard_touched(ledger, link=(u, v))
                 return
             ledger.append(seq, ev.t, ev.kind, (u, v), "skipped-link-exists")
             return
@@ -624,6 +860,7 @@ class SimBackend:
                       "link-failed" if failure else "link-disconnected",
                       {"blocking_s": res.delay_s, **det})
         self._replan_touched(ledger, link=(u, v))
+        self._replan_reshard_touched(ledger, link=(u, v))
         if self.ckpt is not None:
             self.ckpt.on_link_event((u, v))
 
@@ -651,6 +888,7 @@ class SimBackend:
             "latency_s": link.latency_s,
         })
         self._replan_touched(ledger, link=(u, v))
+        self._replan_reshard_touched(ledger, link=(u, v))
         if self.ckpt is not None:
             # The push's precomputed timing rode the old rate: cancel with
             # credit and resume the missing bytes at the new one.
@@ -684,7 +922,7 @@ class SimBackend:
         latency the benchmarks measure."""
         now = self.cluster.sim.now
         key = (min(link), max(link)) if link is not None else None
-        for fl in self.inflight:
+        for fl in self.inflight + self._reshard_fls():
             for r in fl.pending():
                 if node is not None and (r.source == node or node in r.route):
                     r.handle.stall(now)
@@ -936,6 +1174,9 @@ class SimBackend:
         # replayed copy carries the install time (honest record timing);
         # the caller's event object is never mutated — the same in-memory
         # trace must replay byte-identically forever.
+        # An in-flight reshard began after the winner's last sync — the new
+        # leader has no record of it; drop it (holdings keep the old plan).
+        self._cancel_reshard(ledger, "failover")
         parked, self._parked = self._parked, []
         for pseq, ev in parked:
             self.handle(pseq, replace(ev, t=now), ledger)
@@ -1008,6 +1249,8 @@ def run_trace_sim(cluster: SimCluster, events: Iterable[ChurnEvent],
                   ckpt_interval_s: Optional[float] = None,
                   recovery: str = "replica",
                   accounting: bool = False,
+                  reshard: str = "never",
+                  reshard_policy: Optional[ReshardPolicy] = None,
                   ) -> Tuple[EventLedger, Dict[int, object]]:
     """Replay a churn trace through the engine on a simulated cluster."""
     engine = ChurnEngine(SimBackend(cluster, min_active=min_active,
@@ -1017,7 +1260,9 @@ def run_trace_sim(cluster: SimCluster, events: Iterable[ChurnEvent],
                                     detector=detector, codec=codec,
                                     checkpoint=checkpoint,
                                     ckpt_interval_s=ckpt_interval_s,
-                                    recovery=recovery, accounting=accounting))
+                                    recovery=recovery, accounting=accounting,
+                                    reshard=reshard,
+                                    reshard_policy=reshard_policy))
     ledger = engine.run(events)
     return ledger, engine.results
 

@@ -423,27 +423,7 @@ class ChaosScheduler:
         ``partial_credit`` off, cancelled streams forfeit everything in
         flight — the pre-credit behavior."""
         now = self.sim.now
-        shard = int(fl.plan.shard_size) if self.partial_credit else 0
-        for r in fl.pending():
-            r.handle.cancel(now)
-            if not self.partial_credit:
-                continue
-            got = int(r.handle.cancelled_delivered)
-            if r.codec == wire_codec.CODEC_NONE:
-                keep = (got // shard) * shard if shard > 0 else got
-                r.credited = min(int(keep), int(r.nbytes))
-                r.credited_wire = r.credited
-            elif r.wire_shard > 0:
-                n_shards = got // r.wire_shard
-                r.credited = min(n_shards * r.payload_shard, int(r.nbytes))
-                r.credited_wire = min(n_shards * r.wire_shard,
-                                      int(r.wire_nbytes))
-            else:  # unsharded encoded stream: proportional payload prefix
-                frac = got / r.wire_nbytes if r.wire_nbytes else 0.0
-                r.credited = min(int(frac * r.nbytes), int(r.nbytes))
-                r.credited_wire = min(got, int(r.wire_nbytes))
-            if r.credited > 0:
-                fl.t_last_credit = max(fl.t_last_credit, now)
+        self.credit_cancel_pending(fl)
         remaining = fl.state_bytes - fl.delivered_bytes()
         if remaining <= 0:
             return True  # everything already on the new node
@@ -469,6 +449,75 @@ class ChaosScheduler:
         fl.timeline[f"replanned_{fl.replans}"] = t_start
         self._schedule_transfers(fl, plan, t_start, {}, gen=fl.replans)
         return True
+
+    def credit_cancel_pending(self, fl: InflightScaleOut):
+        """Cancel every pending stream of ``fl``, crediting each one's
+        shard-aligned delivered prefix (the loop ``replan_scale_out`` has
+        always run, factored out so reshard fetches share it verbatim —
+        crediting semantics must stay byte-identical between the two
+        paths)."""
+        now = self.sim.now
+        shard = int(fl.plan.shard_size) if self.partial_credit else 0
+        for r in fl.pending():
+            r.handle.cancel(now)
+            if not self.partial_credit:
+                continue
+            got = int(r.handle.cancelled_delivered)
+            if r.codec == wire_codec.CODEC_NONE:
+                keep = (got // shard) * shard if shard > 0 else got
+                r.credited = min(int(keep), int(r.nbytes))
+                r.credited_wire = r.credited
+            elif r.wire_shard > 0:
+                n_shards = got // r.wire_shard
+                r.credited = min(n_shards * r.payload_shard, int(r.nbytes))
+                r.credited_wire = min(n_shards * r.wire_shard,
+                                      int(r.wire_nbytes))
+            else:  # unsharded encoded stream: proportional payload prefix
+                frac = got / r.wire_nbytes if r.wire_nbytes else 0.0
+                r.credited = min(int(frac * r.nbytes), int(r.nbytes))
+                r.credited_wire = min(got, int(r.wire_nbytes))
+            if r.credited > 0:
+                fl.t_last_credit = max(fl.t_last_credit, now)
+
+    # -- reshard fetches (ElasWave layout changes) --------------------------------
+    #
+    # A parallelism-plan reshard moves interval deltas between *live* members.
+    # The fetches ride the same InflightScaleOut machinery (streams, credit,
+    # replans) but must never touch membership: the fetching node is already
+    # active, so there is no ``monitor.activate`` on finish and cancellation
+    # must not ``register_leave`` it (``abort_scale_out`` is scale-out-only).
+
+    def begin_reshard_fetch(self, node: int, plan: ReplicationPlan,
+                            t_start: float) -> InflightScaleOut:
+        """Schedule one member's reshard fetch streams starting at
+        ``t_start`` (the engine charges solver + policy-distribution ahead
+        of it). ``plan`` comes from ``plans.reshard_plan`` — shard-aligned
+        per source, so mid-reshard churn credits exactly like scale-out."""
+        total = sum(int(b) for b in plan.sources.values())
+        shard = int(plan.shard_size)
+        sizes = ([shard] * (total // shard) if shard > 0 and total else
+                 ([total] if total else []))
+        fl = InflightScaleOut(node, self.sim.now, total, sizes,
+                              list(plan.sources), plan, {}, 0.0, t_start,
+                              {"request": self.sim.now}, codec=self.codec)
+        self._schedule_transfers(fl, plan, t_start, {}, gen=0)
+        return fl
+
+    def finish_reshard_fetch(self, fl: InflightScaleOut) -> float:
+        """Virtual time this fetch's payload is installed (last stream's
+        delivery + decode, or the last credit instant when credit completed
+        it). Membership is untouched — the node was live throughout."""
+        done_ts = [r.handle.done_t + r.decode_s
+                   for r in fl.transfers if r.handle.done]
+        return max(max(done_ts, default=fl.t_transfers_start),
+                   fl.t_last_credit)
+
+    def cancel_reshard_fetch(self, fl: InflightScaleOut):
+        """Membership churn invalidated the whole reshard: drop this fetch,
+        keeping delivered-byte credit for the ledger but *not* touching the
+        fetching node's membership (it is still live)."""
+        self.credit_cancel_pending(fl)
+        fl.aborted = True
 
     def abort_scale_out(self, fl: InflightScaleOut, failure: bool = True):
         """The joining node died or lost all its links mid-replication."""

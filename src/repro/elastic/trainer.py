@@ -40,6 +40,13 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import codec as wire_codec
 from repro.core.engine import MIN_LINK_MBPS, ChurnEngine, ChurnEvent, EventLedger
+from repro.core.plans import (
+    ParallelismPlan,
+    ReshardPolicy,
+    decide_reshard,
+    default_reshard_policy,
+    reshard_moved_bytes,
+)
 from repro.core.replication import (
     decode_state,
     encode_state,
@@ -89,7 +96,13 @@ class ElasticTrainer:
         # (device, trace link) so overlapping impairments on one device
         # don't clobber each other; the slowest surviving impairment wins.
         self._link_overrides: Dict[int, Dict[object, NeighborLink]] = {}
-        self._step_fns: Dict[int, Callable] = {}
+        self._step_fns: Dict[tuple, Callable] = {}
+        # Current parallelism layout: tp-ways of tensor parallelism over the
+        # active devices (1 = the pure-DP layout every pre-reshard trainer
+        # ran — meshes, shardings and compiled steps are then bit-identical
+        # to before) and the micro-batch split the reshard policy chose.
+        self._tp = 1
+        self._microbatch = 1
         self.step_count = 0
         self.events: List[ScaleEvent] = []
         self._step_times: Dict[int, list] = {}
@@ -104,11 +117,52 @@ class ElasticTrainer:
 
     # -- mesh / shardings ------------------------------------------------------
 
+    @property
+    def tp(self) -> int:
+        return self._tp
+
+    def parallelism_plan(self) -> ParallelismPlan:
+        """The layout the trainer is currently running, as the same plan
+        object the churn engine reasons about."""
+        n = len(self.active)
+        return ParallelismPlan((n // self._tp, self._tp),
+                               devices=tuple(self.device_ids()),
+                               microbatch=self._microbatch)
+
     def mesh(self) -> Mesh:
+        if self._tp > 1:
+            n = len(self.active)
+            return Mesh(np.array(self.active).reshape(n // self._tp,
+                                                      self._tp),
+                        ("data", "model"))
         return Mesh(np.array(self.active), ("data",))
 
     def _state_sharding(self):
-        return NamedSharding(self.mesh(), P())  # replicated (pure DP)
+        """Replicated spec — the tp == 1 layout (kept as the single-sharding
+        fast path; ``_state_shardings`` generalizes to tp > 1)."""
+        return NamedSharding(self.mesh(), P())
+
+    def _state_shardings(self, state=None):
+        """Sharding (tree) for the training state under the current layout:
+        tp == 1 replicates everything (one sharding broadcast over the
+        tree — bit-identical to the pre-reshard path); tp > 1 shards each
+        leaf's last dim over ``model`` when divisible, degrading
+        non-divisible leaves to replication exactly like
+        ``models.sharding._div`` (and the step-time model's
+        ``replicated_fraction``)."""
+        if self._tp == 1:
+            return self._state_sharding()
+        mesh = self.mesh()
+        state = self.state if state is None else state
+
+        def one(leaf):
+            shape = getattr(leaf, "shape", ())
+            if len(shape) and shape[-1] % self._tp == 0:
+                return NamedSharding(
+                    mesh, P(*([None] * (len(shape) - 1)), "model"))
+            return NamedSharding(mesh, P())
+
+        return jax.tree.map(one, state)
 
     def _batch_sharding(self):
         return NamedSharding(self.mesh(), P("data"))
@@ -213,14 +267,16 @@ class ElasticTrainer:
         return self.state
 
     def _get_step_fn(self, n: int):
-        if n not in self._step_fns:
+        key = (n, self._tp)
+        if key not in self._step_fns:
             step = self.model.make_train_step()
-            self._step_fns[n] = jax.jit(
+            state_sh = self._state_shardings()
+            self._step_fns[key] = jax.jit(
                 step,
-                in_shardings=(self._state_sharding(), self._batch_sharding()),
-                out_shardings=(self._state_sharding(), None),
+                in_shardings=(state_sh, self._batch_sharding()),
+                out_shardings=(state_sh, None),
             )
-        return self._step_fns[n]
+        return self._step_fns[key]
 
     def step(self, batch: dict):
         """batch arrays lead with global_batch (= per_device × n_active)."""
@@ -271,7 +327,11 @@ class ElasticTrainer:
                 "wire_reduction": (float(manifest.total_bytes) / wire
                                    if wire else 1.0),
             }
-        # Physical state movement onto the enlarged mesh.
+        # Physical state movement onto the enlarged mesh. Membership change
+        # resets the layout to the replicate-only baseline (tp = 1); a
+        # reshard policy re-applies tensor parallelism via apply_reshard.
+        self._tp = 1
+        self._microbatch = 1
         self.active = self.active + [device]
         self.state = jax.device_put(self.state, self._state_sharding())
         jax.block_until_ready(self.state)
@@ -299,8 +359,13 @@ class ElasticTrainer:
         if len(self.active) <= 1:
             raise RuntimeError("cannot scale below one device")
         t0 = time.perf_counter()
-        # Snapshot state on survivors BEFORE dropping the device.
+        # Snapshot state on survivors BEFORE dropping the device. The
+        # device_put below gathers any tp-sharded leaves back to full
+        # replicas on the survivor mesh (the replicate-only baseline); a
+        # reshard policy re-applies tensor parallelism afterwards.
         survivors = [d for d in self.active if d != device]
+        self._tp = 1
+        self._microbatch = 1
         self.active = survivors
         self.state = jax.device_put(self.state, self._state_sharding())
         jax.block_until_ready(self.state)
@@ -310,6 +375,32 @@ class ElasticTrainer:
         ev = ScaleEvent("node-failure" if failure else "scale-in",
                         str(device), self.step_count, wall)
         self.events.append(ev)
+        return ev
+
+    def apply_reshard(self, tp: int, microbatch: int = 1) -> ScaleEvent:
+        """Apply a parallelism-plan change on real arrays: rebuild the mesh
+        at (dp, tp) and ``jax.device_put`` every state leaf from its current
+        ``NamedSharding`` to the new layout's. GSPMD moves only the interval
+        deltas; a dp → tp reshard slices replicas in place and the reverse
+        all-gathers — both bit-identical round trips (tests mark the
+        real-array version ``slow``). Stop-free: the next step compiles at
+        most once per (n, tp)."""
+        tp = int(tp)
+        n = len(self.active)
+        if tp < 1 or n % tp:
+            raise ValueError(f"tp={tp} does not divide {n} active devices")
+        t0 = time.perf_counter()
+        self._tp = tp
+        self._microbatch = max(1, int(microbatch))
+        self.state = jax.device_put(self.state, self._state_shardings())
+        jax.block_until_ready(self.state)
+        wall = time.perf_counter() - t0
+        ev = ScaleEvent("reshard", str(self.active[0]), self.step_count,
+                        wall, {"shape": [n // tp, tp],
+                               "microbatch": self._microbatch})
+        self.events.append(ev)
+        if self.on_reshard:
+            self.on_reshard(self.device_ids())
         return ev
 
     # -- recovery tiers (repro.checkpoint wired into the live trainer) ---------
@@ -366,20 +457,28 @@ class ElasticTrainer:
                 raise RuntimeError("no checkpoint on disk")
         else:
             raise ValueError(f"unknown recovery tier {tier!r}")
-        self.state = jax.device_put(tree, self._state_sharding())
+        self.state = jax.device_put(tree, self._state_shardings(tree))
         return step
 
     # -- scenario replay (the unified churn pipeline) ---------------------------------
 
     def replay_scenario(self, events, *, batch_fn=None, steps_between: int = 1,
-                        min_active: int = 2) -> EventLedger:
+                        min_active: int = 2, reshard: str = "never",
+                        reshard_policy: Optional[ReshardPolicy] = None,
+                        state_bytes: int = 0,
+                        tensor_sizes: Optional[Sequence[int]] = None,
+                        ) -> EventLedger:
         """Drive this trainer with a churn trace through the same
         :class:`~repro.core.engine.ChurnEngine` pipeline the simulator uses.
         Returns the event ledger; per-event wall times land in
         ``self.events`` (ScaleEvent list) as before."""
         engine = ChurnEngine(TrainerBackend(self, batch_fn=batch_fn,
                                             steps_between=steps_between,
-                                            min_active=min_active))
+                                            min_active=min_active,
+                                            reshard=reshard,
+                                            reshard_policy=reshard_policy,
+                                            state_bytes=state_bytes,
+                                            tensor_sizes=tensor_sizes))
         return engine.run(events)
 
     # -- stragglers ------------------------------------------------------------------
@@ -428,7 +527,11 @@ class TrainerBackend:
     """
 
     def __init__(self, trainer: ElasticTrainer, *, batch_fn=None,
-                 steps_between: int = 1, min_active: int = 2):
+                 steps_between: int = 1, min_active: int = 2,
+                 reshard: str = "never",
+                 reshard_policy: Optional[ReshardPolicy] = None,
+                 state_bytes: int = 0,
+                 tensor_sizes: Optional[Sequence[int]] = None):
         self.trainer = trainer
         self.batch_fn = batch_fn
         self.steps_between = steps_between
@@ -437,6 +540,23 @@ class TrainerBackend:
         self._node_device: Dict[int, object] = {}  # trace node id -> device
         self._departed: set = set()  # trace nodes that already left/failed
         self._link_faulted: set = set()  # trace links with an applied fault
+        # Parallelism-plan resharding: the trainer backend runs the *same*
+        # pure decision function as SimBackend (decide_reshard over trace
+        # membership + byte counts), so one trace yields identical reshard
+        # records on both substrates; the chosen tp is then applied on real
+        # arrays when it divides the live device count. ``state_bytes`` /
+        # ``tensor_sizes`` parameterize the shared step-time model — pass
+        # the simulated cluster's values for cross-substrate parity.
+        self.reshard_mode = str(reshard)
+        self.reshard_policy = (reshard_policy if reshard_policy is not None
+                               else default_reshard_policy(
+                                   reshard, int(state_bytes) or 1))
+        self.state_bytes = int(state_bytes)
+        self.tensor_sizes = list(tensor_sizes or ())
+        self.plan: Optional[ParallelismPlan] = None
+        #: trace-level membership (node ids), mirroring the simulator's
+        #: ``topo.active_nodes()`` — the decision input that must match.
+        self._members = {d.id for d in trainer.active}
         #: device standing in for the scheduler/coordinator (defaults to
         #: the lowest-id active device — the simulator's home convention);
         #: a replayed ``scheduler-fault`` moves this, keeping one trace
@@ -493,6 +613,7 @@ class TrainerBackend:
                 sev = tr.scale_in(old, failure=True)
                 self.results[seq] = sev
                 shed = True
+                self._members.discard(old.id)
             self._coordinator = new
             ledger.append(seq, ev.t, ev.kind, (old.id, new.id), "failover", {
                 "old_home": old.id, "new_home": new.id, "shed": shed,
@@ -549,6 +670,8 @@ class TrainerBackend:
                 detail["codec"] = cs["codec"]
                 detail["wire_bytes"] = cs["wire_bytes"]
             ledger.append(seq, ev.t, ev.kind, ev.node, "scale-out", detail)
+            self._members.add(ev.node)
+            self._maybe_reshard(seq, ev, ledger)
             return
         if ev.kind in ("leave", "node-failure", "node-fault"):
             failure = ev.kind in ("node-failure", "node-fault")
@@ -581,6 +704,9 @@ class TrainerBackend:
                 detail["detected"] = True
             ledger.append(seq, ev.t, ev.kind, ev.node,
                           "node-failed" if failure else "scaled-in", detail)
+            self._members.discard(ev.node if ev.node in self._members
+                                  else device.id)
+            self._maybe_reshard(seq, ev, ledger)
             return
         # Link events: project the trace link onto its endpoint devices'
         # per-device link model. Unresolvable endpoints keep the historical
@@ -616,6 +742,61 @@ class TrainerBackend:
         if ev.kind in ("link-fault", "link-loss"):
             detail["detected"] = True
         ledger.append(seq, ev.t, ev.kind, (ev.u, ev.v), action, detail)
+
+    def _maybe_reshard(self, seq: int, ev: ChurnEvent, ledger: EventLedger):
+        """The trainer side of parallelism-plan resharding: run the shared
+        ``decide_reshard`` over trace membership, ledger the decision with
+        the *pure* ``moved_bytes`` (identical to SimBackend's), and apply
+        the chosen tp on real arrays. There is no virtual clock, so
+        ``reshard-ready`` lands immediately after ``reshard-started``
+        (recovery *time* is the simulator's job; layout parity is this
+        one's)."""
+        mode = ev.reshard if ev.reshard is not None else self.reshard_mode
+        if mode == "never" and (self.plan is None or self.plan.tp == 1):
+            return
+        devices = sorted(self._members)
+        if not devices:
+            return
+        decision, baseline = decide_reshard(
+            self.reshard_policy, self.plan, devices, self.state_bytes,
+            self.tensor_sizes, mode=mode, pinned_shape=ev.new_shape)
+        if decision is None:
+            if self.plan is not None and self.plan.tp > 1:
+                decision = {
+                    "plan": baseline,
+                    "step_s": self.reshard_policy.step_time(
+                        baseline, self.state_bytes, self.tensor_sizes),
+                    "baseline_step_s": self.reshard_policy.step_time(
+                        baseline, self.state_bytes, self.tensor_sizes),
+                    "moved_bytes": reshard_moved_bytes(
+                        self.plan, baseline, self.state_bytes),
+                    "old_shape": self.plan.signature(),
+                    "new_shape": baseline.signature(),
+                }
+            else:
+                if self.plan is not None:
+                    self.plan = baseline
+                return
+        cand: ParallelismPlan = decision["plan"]
+        tr = self.trainer
+        coord = self.coordinator_device()
+        subject = coord.id if coord is not None else -1
+        ledger.append(seq, ev.t, "reshard", subject, "reshard-started", {
+            "old_shape": decision["old_shape"],
+            "new_shape": decision["new_shape"],
+            "moved_bytes": decision["moved_bytes"],
+            "step_s": decision["step_s"],
+            "baseline_step_s": decision["baseline_step_s"],
+        })
+        self.plan = cand
+        if cand.tp >= 1 and len(tr.active) % cand.tp == 0:
+            sev = tr.apply_reshard(cand.tp, microbatch=cand.microbatch)
+            self.results[seq] = sev
+        ledger.append(seq, ev.t, "reshard", subject, "reshard-ready", {
+            "old_shape": decision["old_shape"],
+            "new_shape": decision["new_shape"],
+            "moved_bytes": decision["moved_bytes"],
+        })
 
     def _device_for(self, node):
         """Trace node → device: the explicit map from joins/leaves first,

@@ -47,12 +47,23 @@ RULES = [
 ]
 
 
+#: when set (``shard_report``), every dim ``_div`` declines to shard because
+#: the axis size doesn't divide it is appended as (axis, dim, axis_size) —
+#: the silent replication-degradation made countable.
+_DEGRADE_SINK: Optional[list] = None
+
+
 def _div(n: int, mesh: Mesh, axis: Optional[str]):
     if axis is None:
         return None
     size = mesh.shape[axis] if not isinstance(axis, tuple) else int(
         np.prod([mesh.shape[a] for a in axis]))
-    return axis if n % size == 0 and size > 1 else None
+    if n % size == 0 and size > 1:
+        return axis
+    if _DEGRADE_SINK is not None and size > 1:
+        name = axis if not isinstance(axis, tuple) else "+".join(axis)
+        _DEGRADE_SINK.append((name, int(n), int(size)))
+    return None
 
 
 def batch_axes(mesh: Mesh):
@@ -249,6 +260,61 @@ def logits_spec(cfg, mesh: Mesh, batch: int) -> P:
     ba = batch_axes(mesh)
     v = _div(cfg.vocab, mesh, "model")
     return P(_div(batch, mesh, ba), None, v)
+
+
+def shard_report(mesh: Mesh, params, cfg=None) -> dict:
+    """What a mesh shape *actually* shards: per-device bytes, and the params
+    ``_div`` silently degraded to replication because an axis size didn't
+    divide their dim — per (rule kind, axis), with tensor and byte counts.
+
+    ``params`` is any params-shaped pytree of arrays or ShapeDtypeStructs
+    (shapes + dtypes suffice; nothing is materialized). The reshard
+    step-time model's ``replicated_fraction`` is the simulator-side proxy
+    for exactly this; ``replication_blowup`` is the measured counterpart:
+    per-device bytes × model-axis size over total bytes (1.0 = the model
+    axis shards everything, model_size = it shards nothing)."""
+    global _DEGRADE_SINK
+    fsdp = cfg is not None and _fsdp_on(cfg)
+    total = 0
+    per_dev = 0
+    degraded: Dict[str, dict] = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        p = _path_str(path)
+        kind = "replicate"
+        for pat, k in RULES:
+            if pat.search(p):
+                kind = k
+                break
+        sink: list = []
+        _DEGRADE_SINK = sink
+        try:
+            spec = _leaf_spec(kind, leaf.shape, mesh, fsdp, cfg)
+        finally:
+            _DEGRADE_SINK = None
+        itemsize = np.dtype(getattr(leaf, "dtype", np.float32)).itemsize
+        nbytes = int(np.prod(leaf.shape, dtype=np.int64)) * itemsize \
+            if len(leaf.shape) else itemsize
+        shard_factor = 1
+        for axis in spec:
+            for a in (axis if isinstance(axis, tuple) else (axis,)):
+                if a is not None:
+                    shard_factor *= int(mesh.shape[a])
+        total += nbytes
+        per_dev += nbytes // shard_factor
+        for axis_name, _n, _size in sink:
+            d = degraded.setdefault(f"{kind}/{axis_name}",
+                                    {"tensors": 0, "bytes": 0})
+            d["tensors"] += 1
+            d["bytes"] += nbytes
+    model_size = int(mesh.shape.get("model", 1))
+    return {
+        "mesh_shape": dict(mesh.shape),
+        "total_bytes": int(total),
+        "per_device_bytes": int(per_dev),
+        "replication_blowup": (per_dev * model_size / total if total
+                               else 1.0),
+        "degraded": degraded,
+    }
 
 
 def named(mesh: Mesh, spec_tree):

@@ -11,6 +11,7 @@ from repro.scenarios.generators import (
     link_flaps,
     poisson_churn,
     regional_partition,
+    reshard_churn,
     scheduler_churn,
     silent_failures,
 )
@@ -29,4 +30,5 @@ __all__ = [
     "silent_failures",
     "detector_stress",
     "scheduler_churn",
+    "reshard_churn",
 ]

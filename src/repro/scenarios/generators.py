@@ -37,6 +37,13 @@ Catalog:
   (``scheduler-fault``) mid-scale-out: deputies must detect the missing
   heartbeat acks, elect a successor, re-adopt the in-flight replications
   from the replicated ledger, and serve the joins that arrived leaderless.
+* ``reshard_churn``      — membership walks down a divisor-rich chain
+  (spaced crashes) and back up (spaced joins), every event annotated with a
+  ``reshard`` policy: the trace that exercises parallelism-plan resharding
+  (dp/tp reshapes) rather than placement-only recovery. Events are spaced
+  far enough apart that each reshard completes before the next membership
+  change, so the simulator and the trainer backend reach the same plan
+  after every event (the cross-substrate parity trace).
 * ``checkpointed_training`` — poisson crash churn plus trace-borne periodic
   ``checkpoint`` push requests: the GoodPut A/B trace where fixed-cadence
   pushes ride the same contended network as the failures they insure
@@ -548,6 +555,62 @@ def scheduler_churn(
                          })
 
 
+def reshard_churn(
+    base_nodes: Sequence[int], *, seed: int, n_failures: int = 3,
+    n_joins: int = 2, spacing_s: float = 60.0, reshard: str = "auto",
+    failure_fraction: float = 1.0, t_start: float = 10.0,
+    max_links: int = 3, bw_range=DEFAULT_BW_RANGE,
+    lat_range=DEFAULT_LAT_RANGE, compute_range=DEFAULT_COMPUTE_RANGE,
+) -> ScenarioTrace:
+    """Membership steps down a divisor-rich chain, then grows back — the
+    parallelism-plan resharding trace.
+
+    ``n_failures`` spaced departures (crashes with probability
+    ``failure_fraction``) shrink the cluster one node at a time, then
+    ``n_joins`` spaced joins grow it back; every event carries the
+    ``reshard`` annotation (default ``"auto"``), so each membership change
+    re-evaluates the (dp, tp) divisor chain through ``decide_reshard``.
+    Events are ``spacing_s`` apart (jitter bounded to a quarter of the
+    spacing), wide enough for each reshard's interval-delta fetches to
+    drain before the next change: the simulator never cancels a reshard
+    mid-flight, so it lands on the same plan sequence as the trainer
+    backend, which applies decisions instantly — the property the
+    cross-substrate parity tests replay this trace to check. Joins bring
+    at least two links so reshard fetches survive a single source loss."""
+    rng = random.Random(seed)
+    m = _Membership(base_nodes, rng)
+    events: List[ChurnEvent] = []
+    t = t_start
+    fails = 0
+    for _ in range(n_failures):
+        victim = m.pick_victim()
+        if victim is None:
+            break
+        kind = ("node-failure" if rng.random() < failure_fraction
+                else "leave")
+        ev = ChurnEvent(t=t + rng.uniform(0, spacing_s / 4), kind=kind,
+                        node=victim, reshard=reshard)
+        events.append(ev)
+        m.leave(victim)
+        fails += 1
+        t += spacing_s
+    for _ in range(n_joins):
+        ev = _join_event(t + rng.uniform(0, spacing_s / 4), m, rng,
+                         max_links=max_links, min_links=2,
+                         bw_range=bw_range, lat_range=lat_range,
+                         compute_range=compute_range)
+        ev.reshard = reshard
+        events.append(ev)
+        t += spacing_s
+    return ScenarioTrace("reshard-churn", seed,
+                         sorted(events, key=lambda e: e.t), {
+                             "n_failures": fails, "n_joins": n_joins,
+                             "spacing_s": spacing_s, "reshard": reshard,
+                             "failure_fraction": failure_fraction,
+                             "base_nodes": len(base_nodes),
+                         })
+
+
 def checkpointed_training(
     base_nodes: Sequence[int], *, seed: int, horizon_s: float,
     ckpt_every_s: float = 20.0, rate_leave: float = 0.03,
@@ -615,5 +678,6 @@ GENERATORS = {
     "silent-failures": silent_failures,
     "detector-stress": detector_stress,
     "scheduler-churn": scheduler_churn,
+    "reshard-churn": reshard_churn,
     "checkpointed-training": checkpointed_training,
 }

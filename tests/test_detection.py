@@ -364,7 +364,14 @@ def test_json_roundtrip_every_event_kind():
                    compute_s=1.7),
         ChurnEvent(t=1.5, kind="join", node=101, links={}, compute_s=2.5),
         ChurnEvent(t=2.0, kind="leave", node=5),
+        # Parallelism-plan resharding annotations: the mode and pinned
+        # shapes must survive the wire (shapes as tuples in memory, lists
+        # in JSON), and events without them stay clean on the wire.
+        ChurnEvent(t=2.5, kind="leave", node=6, reshard="auto",
+                   old_shape=(4, 2), new_shape=(3, 2)),
         ChurnEvent(t=3.0, kind="node-failure", node=3),
+        ChurnEvent(t=3.5, kind="node-failure", node=8, reshard="always",
+                   new_shape=(2, 4)),
         ChurnEvent(t=4.0, kind="link-join", u=1, v=4,
                    bandwidth_mbps=300.0, latency_s=0.0),
         ChurnEvent(t=5.0, kind="link-leave", u=1, v=4),
