@@ -8,7 +8,7 @@ accountant reading the ledger afterwards:
   the baseline curve showing how detection/election/replication rework eat
   productive time as failures arrive faster.
 * **cadence_ab**: fixed vs. adaptive checkpoint cadence under
-  ``recovery="checkpoint"`` — the Unicron-style ``sqrt(2·cost/rate)``
+  ``policy="fixed-checkpoint"`` — the Unicron-style ``sqrt(2·cost/rate)``
   interval, recomputed online from the ledger's own measured fault rate
   and checkpoint cost, must beat (or match) the fixed baseline's GoodPut.
 * **recovery_ab**: replica vs. checkpoint recovery on the same trace —
@@ -108,7 +108,7 @@ def run_cadence_ab(seeds=FULL_SEEDS, rate_leave: float = 0.04):
     for cadence in ("fixed", "adaptive"):
         reports = [measure_goodput(seed=s, rate_leave=rate_leave,
                                    checkpoint=cadence,
-                                   recovery="checkpoint")[0]
+                                   policy="fixed-checkpoint")[0]
                    for s in seeds]
         rows.append({
             "cadence": cadence,
@@ -128,7 +128,7 @@ def run_recovery_ab(seeds=FULL_SEEDS, rate_leave: float = 0.04):
     for recovery in ("replica", "checkpoint"):
         reports = [measure_goodput(seed=s, rate_leave=rate_leave,
                                    checkpoint="adaptive",
-                                   recovery=recovery)[0]
+                                   policy=f"fixed-{recovery}")[0]
                    for s in seeds]
         rows.append({
             "recovery": recovery,
@@ -162,9 +162,9 @@ def goodput_smoke() -> int:
     adaptive_wins = (by["adaptive"]["goodput_fraction"]
                      >= by["fixed"]["goodput_fraction"])
     r1, l1 = measure_goodput(seed=SMOKE_SEEDS[0], checkpoint="adaptive",
-                             recovery="checkpoint")
+                             policy="fixed-checkpoint")
     r2, l2 = measure_goodput(seed=SMOKE_SEEDS[0], checkpoint="adaptive",
-                             recovery="checkpoint")
+                             policy="fixed-checkpoint")
     identical = (l1.canonical_bytes() == l2.canonical_bytes()
                  and json.dumps(r1.to_json(), sort_keys=True)
                  == json.dumps(r2.to_json(), sort_keys=True))

@@ -1,0 +1,188 @@
+"""Recovery-policy A/B — Chameleon-style per-fault-class action selection
+(docs/architecture.md §"Recovery policy").
+
+Two experiments, both replayed on the ``mixed_faults`` trace (silent node
+faults + lossy links + a scheduler fault + periodic checkpoint pushes +
+joins — the workload where no single standing action is right for every
+event):
+
+* **policy_ab**: adaptive selection vs. every fixed preference chain
+  (``fixed-replica`` / ``fixed-checkpoint`` / ``fixed-park``) on the same
+  trace, same checkpoint tier, same reshard gate. The adaptive policy
+  scores each feasible action with its online-calibrated cost model and
+  must reach GoodPut ≥ the best fixed chain while its ledgered
+  ``recovery-decided`` records span ≥ 3 distinct chosen actions.
+* **override_park**: the per-event ``recovery=`` annotation forcing
+  ``park-and-degrade`` on every node fault — the trace-authored override
+  path (forced decisions, ``parked-degraded`` terminal records) A/B'd
+  against the policy's own free choices.
+
+Results merge into ``BENCH_recovery_policy.json`` at the repo root.
+``--smoke`` asserts the acceptance bar (adaptive ≥ best fixed, ≥ 3
+distinct actions, same-seed adaptive runs byte-identical);
+``benchmarks.run`` executes the full sweep.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import MiB, make_cluster, print_csv, save
+from repro.core.engine import run_trace_goodput
+from repro.core.recovery import chosen_actions, decision_digest
+from repro.core.topology import random_edge_topology
+from repro.scenarios import mixed_faults
+
+BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_recovery_policy.json"
+
+N_NODES = 12
+STATE = 16 * MiB
+TENSOR = 1 * MiB
+HORIZON_S = 300.0
+POLICIES = ("fixed-replica", "fixed-checkpoint", "fixed-park", "adaptive")
+SMOKE_SEEDS = (3,)
+FULL_SEEDS = (3, 7, 11)
+
+
+def write_bench(section: str, payload) -> None:
+    """Merge one section into BENCH_recovery_policy.json (repo root)."""
+    data = {}
+    if BENCH_PATH.exists():
+        try:
+            data = json.loads(BENCH_PATH.read_text())
+        except (ValueError, OSError):
+            data = {}
+    data[section] = payload
+    BENCH_PATH.write_text(json.dumps(data, indent=1))
+
+
+def measure(policy: str, *, seed: int, recovery=None):
+    """One mixed-fault replay under ``policy``; returns (ledger, report).
+
+    All policies see the identical trace, checkpoint tier and reshard
+    gate — the recovery preference is the only independent variable.
+    ``recovery`` annotates every node fault with a forced per-event
+    action (the trace-authored override path)."""
+    topo = random_edge_topology(N_NODES, seed=seed)
+    trace = mixed_faults(topo, seed=seed + 3, horizon_s=HORIZON_S,
+                         recovery=recovery)
+    cl = make_cluster(topo, state_bytes=STATE,
+                      tensor_sizes=[TENSOR] * (STATE // TENSOR),
+                      strategy="chaos")
+    cl.train(1)
+    ledger, _, report = run_trace_goodput(cl, list(trace),
+                                          checkpoint="adaptive",
+                                          policy=policy, reshard="auto")
+    return ledger, report
+
+
+def _fmt_actions(counts) -> str:
+    return " ".join(f"{k}:{v}" for k, v in counts.items()) or "-"
+
+
+def run_policy_ab(seeds=FULL_SEEDS):
+    """Adaptive vs. every fixed preference chain on the mixed trace."""
+    rows = []
+    for policy in POLICIES:
+        reports, actions = [], {}
+        for s in seeds:
+            ledger, report = measure(policy, seed=s)
+            reports.append(report)
+            for k, v in chosen_actions(ledger).items():
+                actions[k] = actions.get(k, 0) + v
+        rows.append({
+            "policy": policy,
+            "goodput_fraction": round(float(np.mean(
+                [r.goodput_fraction for r in reports])), 4),
+            "badput_s": round(float(np.mean(
+                [r.badput_s for r in reports])), 2),
+            "lost_s": round(float(np.mean(
+                [r.components["lost"] for r in reports])), 2),
+            "actions": _fmt_actions(dict(sorted(actions.items()))),
+        })
+    return rows
+
+
+def run_override_park(seeds=FULL_SEEDS):
+    """Trace-forced ``park-and-degrade`` on every node fault vs. the
+    policy's free choice — the per-event annotation path. Forced
+    decisions record regardless of policy (``forced: true``), so even
+    the silent fixed chain ledgers its overridden choices."""
+    rows = []
+    for policy, recovery in (("adaptive", None),
+                             ("adaptive", "park-and-degrade"),
+                             ("fixed-replica", "park-and-degrade")):
+        reports, parked, actions = [], 0, {}
+        for s in seeds:
+            ledger, report = measure(policy, seed=s, recovery=recovery)
+            reports.append(report)
+            parked += sum(1 for r in ledger if r.action == "parked-degraded")
+            for k, v in chosen_actions(ledger).items():
+                actions[k] = actions.get(k, 0) + v
+        rows.append({
+            "policy": policy,
+            "recovery": recovery or "-",
+            "goodput_fraction": round(float(np.mean(
+                [r.goodput_fraction for r in reports])), 4),
+            "parked": parked,
+            "actions": _fmt_actions(dict(sorted(actions.items()))),
+        })
+    return rows
+
+
+AB_COLS = ["policy", "goodput_fraction", "badput_s", "lost_s", "actions"]
+OVERRIDE_COLS = ["policy", "recovery", "goodput_fraction", "parked",
+                 "actions"]
+
+
+def recovery_policy_smoke() -> int:
+    """CI bar: adaptive GoodPut ≥ every fixed chain on the mixed trace,
+    ≥ 3 distinct actions chosen, same-seed adaptive runs byte-identical
+    (ledger bytes and the substrate-independent decision digest)."""
+    ab = run_policy_ab(seeds=SMOKE_SEEDS)
+    print_csv("Recovery-policy A/B (mixed faults)", ab, AB_COLS)
+    override = run_override_park(seeds=SMOKE_SEEDS)
+    print_csv("Per-event override (forced park)", override, OVERRIDE_COLS)
+    write_bench("policy_ab", ab)
+    write_bench("override_park", override)
+
+    by = {r["policy"]: r for r in ab}
+    best_fixed = max(r["goodput_fraction"] for r in ab
+                     if r["policy"] != "adaptive")
+    adaptive_wins = by["adaptive"]["goodput_fraction"] >= best_fixed
+    l1, r1 = measure("adaptive", seed=SMOKE_SEEDS[0])
+    l2, r2 = measure("adaptive", seed=SMOKE_SEEDS[0])
+    identical = (l1.canonical_bytes() == l2.canonical_bytes()
+                 and decision_digest(l1) == decision_digest(l2)
+                 and json.dumps(r1.to_json(), sort_keys=True)
+                 == json.dumps(r2.to_json(), sort_keys=True))
+    distinct = len(chosen_actions(l1))
+    ok = adaptive_wins and identical and distinct >= 3
+    print(f"derived: adaptive_goodput={by['adaptive']['goodput_fraction']}"
+          f" best_fixed_goodput={best_fixed}"
+          f" (adaptive>=best_fixed: {adaptive_wins})")
+    print(f"derived: same_seed_ledger_and_decisions_identical={identical}")
+    print(f"derived: distinct_actions_chosen={distinct} (>=3)")
+    print("SMOKE_OK" if ok else "SMOKE_FAILED")
+    return 0 if ok else 1
+
+
+def main():
+    if "--smoke" in sys.argv[1:]:
+        return recovery_policy_smoke()
+    ab = run_policy_ab()
+    print_csv("Recovery-policy A/B (mixed faults)", ab, AB_COLS)
+    write_bench("policy_ab", ab)
+    save("recovery_policy_ab", ab)
+    override = run_override_park()
+    print_csv("Per-event override (forced park)", override, OVERRIDE_COLS)
+    write_bench("override_park", override)
+    save("recovery_policy_override", override)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,11 +1,20 @@
 """Benchmark orchestrator — one harness per paper table/figure (task spec §d)
-plus the roofline report. ``PYTHONPATH=src python -m benchmarks.run``"""
+plus the roofline report. ``PYTHONPATH=src python -m benchmarks.run``
+
+``--summary`` skips execution and aggregates every ``BENCH_*.json``
+already at the repo root into one table: benchmark, section, headline
+metric, the first row's value (the baseline configuration), the best
+row's value, and the improvement factor.
+"""
 from __future__ import annotations
 
+import json
 import sys
 import time
 import traceback
+from pathlib import Path
 
+REPO_ROOT = Path(__file__).resolve().parent.parent
 
 BENCHMARKS = [
     ("fig3_components", "benchmarks.components"),
@@ -16,6 +25,7 @@ BENCHMARKS = [
     ("replication_codec", "benchmarks.replication_codec"),
     ("goodput", "benchmarks.goodput"),
     ("resharding", "benchmarks.resharding"),
+    ("recovery_policy", "benchmarks.recovery_policy"),
     ("fig10_idle_time", "benchmarks.idle_time"),
     ("fig11_14_convergence", "benchmarks.convergence"),
     ("fig15_replication_ablation", "benchmarks.replication_ablation"),
@@ -24,7 +34,78 @@ BENCHMARKS = [
 ]
 
 
+# Headline metric per section, in priority order: (key, higher_is_better).
+HEADLINE = [
+    ("goodput_fraction", True),
+    ("speedup", True),
+    ("wire_reduction", True),
+    ("mean_step_s", False),
+    ("failover_s", False),
+    ("delay_s", False),
+]
+
+
+def _label(row: dict) -> str:
+    """The row's configuration label: its leading non-metric columns."""
+    parts = []
+    for k, v in row.items():
+        if isinstance(v, (int, float)) and not isinstance(v, bool):
+            if parts:
+                break
+            parts.append(f"{k}={v}")  # numeric sweep axis (churn rate, ...)
+            break
+        parts.append(str(v))
+    return "/".join(parts) if parts else "-"
+
+
+def summary() -> int:
+    """Aggregate every BENCH_*.json at the repo root into one table."""
+    rows = []
+    for path in sorted(REPO_ROOT.glob("BENCH_*.json")):
+        try:
+            data = json.loads(path.read_text())
+        except (ValueError, OSError):
+            print(f"[summary] skipping unreadable {path.name}")
+            continue
+        bench = path.stem[len("BENCH_"):]
+        for section, table in sorted(data.items()):
+            if not (isinstance(table, list) and table
+                    and all(isinstance(r, dict) for r in table)):
+                continue
+            metric = next(((k, hi) for k, hi in HEADLINE
+                           if k in table[0]), None)
+            if metric is None:
+                continue
+            key, higher = metric
+            vals = [r for r in table if isinstance(r.get(key), (int, float))]
+            if not vals:
+                continue
+            base = vals[0]
+            best = (max if higher else min)(vals, key=lambda r: r[key])
+            lo, hi = sorted((base[key], best[key]))
+            factor = (hi / lo) if lo else float("inf")
+            rows.append({
+                "benchmark": bench,
+                "section": section,
+                "metric": key,
+                "baseline": f"{_label(base)}:{base[key]}",
+                "best": f"{_label(best)}:{best[key]}",
+                "speedup": f"{factor:.2f}x",
+            })
+    if not rows:
+        print("no BENCH_*.json tables found at the repo root")
+        return 1
+    cols = ["benchmark", "section", "metric", "baseline", "best", "speedup"]
+    widths = {c: max(len(c), *(len(str(r[c])) for r in rows)) for c in cols}
+    print("  ".join(c.ljust(widths[c]) for c in cols))
+    for r in rows:
+        print("  ".join(str(r[c]).ljust(widths[c]) for c in cols))
+    return 0
+
+
 def main() -> int:
+    if "--summary" in sys.argv[1:]:
+        return summary()
     failures = 0
     for name, module in BENCHMARKS:
         print(f"\n{'='*72}\n== {name} ({module})\n{'='*72}")

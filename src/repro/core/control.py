@@ -513,7 +513,10 @@ class ControlPlane:
     def _install(self):
         """The winner takes over: scheduler identity moves, heartbeat
         routes re-target the new home, sweeps restart fresh, deputies are
-        re-appointed, and the engine is told to re-adopt in-flight work."""
+        re-appointed, and the engine is told to re-adopt in-flight work.
+        Per-entry adopt-vs-rebuild goes through the recovery policy's
+        re-adoption context (``repro.core.recovery``), which ledgers the
+        choice under an adaptive policy."""
         if self._pending_install is None:
             return
         winner, result = self._pending_install

@@ -53,10 +53,13 @@ from repro.core.plans import (
     RESHARD_MODES,
     ParallelismPlan,
     ReshardPolicy,
-    decide_reshard,
-    default_reshard_policy,
-    reshard_moved_bytes,
     reshard_plan,
+)
+from repro.core.recovery import (
+    RECOVERY_ACTIONS,
+    FaultContext,
+    decision_detail,
+    make_policy,
 )
 from repro.core.topology import Link
 
@@ -112,12 +115,21 @@ class ChurnEvent:
     reshard: Optional[str] = None
     old_shape: Optional[Tuple[int, ...]] = None
     new_shape: Optional[Tuple[int, ...]] = None
+    #: per-event recovery-action override (node-failure / node-fault /
+    #: scheduler-fault): force this action (one of
+    #: ``repro.core.recovery.RECOVERY_ACTIONS``) for the failure this event
+    #: causes, overriding the backend's standing policy — mirroring how
+    #: ``reshard`` overrides the standing reshard mode. None = let the
+    #: policy choose.
+    recovery: Optional[str] = None
 
     def __post_init__(self):
         if self.kind not in EVENT_KINDS:
             raise ValueError(f"unknown churn event kind {self.kind!r}")
         if self.reshard is not None and self.reshard not in RESHARD_MODES:
             raise ValueError(f"unknown reshard mode {self.reshard!r}")
+        if self.recovery is not None and self.recovery not in RECOVERY_ACTIONS:
+            raise ValueError(f"unknown recovery action {self.recovery!r}")
 
     def to_json(self) -> dict:
         # Every field serializes on `is None` checks (not truthiness), so an
@@ -151,6 +163,8 @@ class ChurnEvent:
             out["old_shape"] = [int(s) for s in self.old_shape]
         if self.new_shape is not None:
             out["new_shape"] = [int(s) for s in self.new_shape]
+        if self.recovery is not None:
+            out["recovery"] = self.recovery
         return out
 
     @classmethod
@@ -170,7 +184,8 @@ class ChurnEvent:
                    old_shape=(tuple(int(s) for s in d["old_shape"])
                               if "old_shape" in d else None),
                    new_shape=(tuple(int(s) for s in d["new_shape"])
-                              if "new_shape" in d else None))
+                              if "new_shape" in d else None),
+                   recovery=d.get("recovery"))
 
     def link_objects(self) -> Dict[int, Link]:
         return {p: Link(bw, lat) for p, (bw, lat) in (self.links or {}).items()}
@@ -284,12 +299,29 @@ class SimBackend:
                  codec: str = wire_codec.CODEC_NONE,
                  checkpoint: Optional[str] = None,
                  ckpt_interval_s: Optional[float] = None,
-                 recovery: str = "replica",
+                 policy="fixed",
                  accounting: bool = False,
                  reshard: str = "never",
                  reshard_policy: Optional[ReshardPolicy] = None):
         self.cluster = cluster
         self.min_active = min_active
+        # Unified recovery-policy layer (repro.core.recovery): every fault
+        # handler consults ``self.policy`` — which action to take on a node
+        # failure, whether to credit-replan touched streams, whether a new
+        # leader adopts or rebuilds an in-flight scale-out, and whether a
+        # membership change reshapes the (dp, tp) plan. ``"fixed"``
+        # reproduces the pre-policy behavior exactly (no decision records);
+        # ``"adaptive"`` scores feasible actions with costs calibrated
+        # online from this run's own ledger measurements.
+        self.policy = make_policy(policy, reshard=reshard,
+                                  reshard_policy=reshard_policy,
+                                  state_bytes=cluster.state_bytes)
+        #: park-and-degrade was chosen at least once: the cluster runs on
+        #: under a relaxed sync policy instead of restoring redundancy.
+        self.degraded = False
+        #: fault subject -> per-event recovery override, stashed at silent
+        #: injection and honored when the monitor detects the failure.
+        self._fault_recovery: Dict[Tuple, str] = {}
         #: GoodPut accounting (repro.core.goodput): a pure post-hoc read of
         #: the ledger — enabling it cannot change a ledger byte.
         self.accounting = bool(accounting)
@@ -340,19 +372,14 @@ class SimBackend:
         self.ckpt: Optional[SimCheckpointTier] = None
         if checkpoint is not None:
             self.ckpt = SimCheckpointTier(self, cadence=checkpoint,
-                                          interval_s=ckpt_interval_s,
-                                          recovery=recovery)
+                                          interval_s=ckpt_interval_s)
         # Parallelism-plan resharding (ElasWave): membership changes may
         # reshape the (dp, tp) layout instead of re-replicating into the old
-        # one. ``"never"`` (the default) leaves ``self.plan`` None — the
-        # implicit pure-DP full-replica layout — and writes no records, so
-        # every pre-reshard trace replays byte-identically.
-        if reshard not in RESHARD_MODES:
-            raise ValueError(f"unknown reshard mode {reshard!r}")
-        self.reshard_mode = reshard
-        self.reshard_policy = (reshard_policy if reshard_policy is not None
-                               else default_reshard_policy(
-                                   reshard, cluster.state_bytes))
+        # one. The reshard mode/policy live on ``self.policy`` — reshard is
+        # one candidate recovery action, not a separate gate. ``"never"``
+        # (the default) leaves ``self.plan`` None — the implicit pure-DP
+        # full-replica layout — and writes no records, so every pre-reshard
+        # trace replays byte-identically.
         self.plan: Optional[ParallelismPlan] = None
         self._reshard: Optional[dict] = None  # one in-flight reshard at a time
         self._join_reshard: Dict[int, Tuple] = {}  # node -> (mode, new_shape)
@@ -516,6 +543,71 @@ class SimBackend:
                 self._after_membership_change(seq, ledger, mode, pinned)
         self._finalize_reshard(ledger)
 
+    # -- recovery-policy plumbing ---------------------------------------------
+
+    def _record_decision(self, seq: int, ledger: EventLedger,
+                         ctx: FaultContext, dec) -> None:
+        """Ledger a policy verdict as a first-class ``recovery-decided``
+        record (scored alternatives included) — how GoodPut attributes time
+        per chosen action. Silent policies (FixedPolicy) write nothing so
+        pre-policy digests replay byte-identically; a per-event override
+        (``forced``) always records — the annotation itself is new input."""
+        if not (self.policy.records or dec.forced):
+            return
+        ledger.append(seq, self.cluster.sim.now, "recovery", ctx.subject,
+                      "recovery-decided", decision_detail(ctx, dec))
+
+    def _link_classes(self) -> Tuple[float, ...]:
+        """Sorted live-link bandwidth classes (Mbit/s) — the WAN
+        heterogeneity input to adaptive scoring. Deterministic: sorted,
+        rounded, active links only."""
+        seen = set()
+        for u in self.topo.active_nodes():
+            for v in self.topo.neighbors(u):
+                seen.add((min(u, v), max(u, v)))
+        return tuple(sorted(round(self.topo.link(u, v).bandwidth_mbps, 6)
+                            for u, v in seen))
+
+    def _failure_context(self, node: int, ev: ChurnEvent,
+                         det: dict) -> FaultContext:
+        """Build the node-failure decision context from what the ledger
+        already measures. The substrate-local fields (detection latency,
+        link classes, checkpoint age) feed the cost scores only; the parity
+        projection (``recovery.decision_digest``) never sees them."""
+        override = (ev.recovery if ev.recovery is not None
+                    else self._fault_recovery.pop(("node", node), None))
+        ckpt_age = None
+        if self.ckpt is not None:
+            last = self.ckpt.last_ckpt
+            if last is not None and last.get("holder") != node:
+                ckpt_age = self.cluster.sim.now - last["t"]
+        return FaultContext(
+            kind="node-failure", t=self.cluster.sim.now, subject=(node,),
+            n_active=len(self.topo.active_nodes()),
+            min_active=self.min_active,
+            state_bytes=self.cluster.state_bytes,
+            detection_s=det.get("detection_s"),
+            link_mbps=self._link_classes(),
+            # A full peer replica survives unless the plan is sharded with
+            # a single data-parallel replica group.
+            replica_feasible=(self.plan is None or self.plan.dp > 1),
+            ckpt_available=self.ckpt is not None, ckpt_age_s=ckpt_age,
+            override=override)
+
+    def _park_and_degrade(self, seq: int, node: int, ledger: EventLedger):
+        """Execute ``park-and-degrade``: no state is restored — the cluster
+        trains on without the dead node's redundancy, paying only a sync
+        policy swap. Terminal record; ``blocking_s`` routes the swap into
+        the "handling" BadPut window."""
+        swap_s = self.sched._update_sync_policy()
+        self.degraded = True
+        ledger.append(seq, self.cluster.sim.now, "recovery", node,
+                      "parked-degraded", {
+                          "blocking_s": swap_s,
+                          "n_active": len(self.topo.active_nodes()),
+                          "sync_policy_version": self.sched.sync_policy_version,
+                      })
+
     # -- parallelism-plan resharding (ElasWave) --------------------------------
     #
     # ``self.plan`` is the cluster's current ParallelismPlan; None means the
@@ -535,38 +627,26 @@ class SimBackend:
     def _after_membership_change(self, seq: int, ledger: EventLedger,
                                  mode: Optional[str],
                                  pinned_shape) -> None:
-        mode = self.reshard_mode if mode is None else mode
-        if mode == "never" and (self.plan is None or self.plan.tp == 1):
-            return  # pre-reshard path: no plan state, no records
-        devices = sorted(self.topo.active_nodes())
-        if not devices:
-            return
-        decision, baseline = decide_reshard(
-            self.reshard_policy, self.plan, devices,
-            self.cluster.state_bytes, self.cluster.tensor_sizes,
-            mode=mode, pinned_shape=pinned_shape)
-        if decision is None:
-            if self.plan is not None and self.plan.tp > 1:
-                # mode "never" while sharded: the layout must still fall
-                # back to replicate-only — survivors' intervals moved.
-                decision = {
-                    "plan": baseline,
-                    "step_s": self.reshard_policy.step_time(
-                        baseline, self.cluster.state_bytes,
-                        self.cluster.tensor_sizes),
-                    "baseline_step_s": self.reshard_policy.step_time(
-                        baseline, self.cluster.state_bytes,
-                        self.cluster.tensor_sizes),
-                    "moved_bytes": reshard_moved_bytes(
-                        self.plan, baseline, self.cluster.state_bytes),
-                    "old_shape": self.plan.signature(),
-                    "new_shape": baseline.signature(),
-                }
-            else:
-                if self.plan is not None:
-                    self.plan = baseline  # refresh device membership
-                return
-        self._start_reshard(seq, decision, ledger)
+        """Membership changed: ask the policy whether the layout should
+        reshape. The reshard-vs-keep evaluation (including the forced
+        replicate-only fall-back while sharded under mode "never") lives in
+        ``repro.core.recovery.evaluate_membership``; this method only
+        executes the verdict."""
+        active = sorted(self.topo.active_nodes())
+        ctx = FaultContext(
+            kind="membership-change", t=self.cluster.sim.now,
+            subject=(self.sched.node,), n_active=len(active),
+            min_active=self.min_active,
+            state_bytes=self.cluster.state_bytes,
+            plan=self.plan, reshard_mode=mode, pinned_shape=pinned_shape,
+            devices=tuple(active),
+            tensor_sizes=tuple(self.cluster.tensor_sizes))
+        dec = self.policy.decide(ctx)
+        self._record_decision(seq, ledger, ctx, dec)
+        if dec.reshard is not None:
+            self._start_reshard(seq, dec.reshard, ledger)
+        elif dec.baseline is not None and self.plan is not None:
+            self.plan = dec.baseline  # refresh device membership
 
     def _start_reshard(self, seq: int, decision: dict, ledger: EventLedger):
         now = self.cluster.sim.now
@@ -683,19 +763,40 @@ class SimBackend:
                                   0, fl.state_bytes - delivered),
                           })
 
-    def _replan_touched(self, ledger: EventLedger, *, node=None, link=None):
+    def _replan_touched(self, ledger: EventLedger, *, node=None, link=None,
+                        seq: int = -1):
         """Re-plan (or abort) in-flight replications invalidated by churn.
 
-        Each re-plan credits the shard-aligned prefix every cancelled stream
-        had delivered (``credited_bytes``); the new plan covers only the
-        ``replanned_bytes`` still missing from the joining node."""
-        for fl in list(self.inflight):
-            touched = ((node is not None and fl.uses_node(node))
-                       or (link is not None and fl.uses_link(*link)))
-            if not touched:
-                continue
+        The stream-churn decision (credit-aware replan vs. restart from
+        scratch) flows through the policy once per churn event; each re-plan
+        then credits the shard-aligned prefix every cancelled stream had
+        delivered (``credited_bytes``) and the new plan covers only the
+        ``replanned_bytes`` still missing from the joining node. A stream
+        with no surviving route aborts regardless — that is feasibility,
+        not policy."""
+        touched_fls = [fl for fl in self.inflight
+                       if (node is not None and fl.uses_node(node))
+                       or (link is not None and fl.uses_link(*link))]
+        if not touched_fls:
+            return
+        ctx = FaultContext(
+            kind="stream-churn", t=self.cluster.sim.now,
+            subject=(node,) if node is not None else tuple(link),
+            n_active=len(self.topo.active_nodes()),
+            min_active=self.min_active,
+            state_bytes=self.cluster.state_bytes,
+            inflight_credit_bytes=sum(fl.delivered_bytes()
+                                      for fl in touched_fls),
+            link_mbps=self._link_classes())
+        dec = self.policy.decide(ctx)
+        self._record_decision(seq, ledger, ctx, dec)
+        solver_s = (self.sched.solver_time_model
+                    if self.sched.solver_time_model is not None
+                    else self.DEFAULT_SOLVER_CHARGE_S)
+        for fl in touched_fls:
             seq = self._inflight_seq.get(fl.new_node, -1)
             if self.sched.replan_scale_out(fl):
+                self.policy.observe("replan", solver_s)
                 self._stall_faulted_streams(fl)
                 delivered = fl.delivered_bytes()
                 detail = {
@@ -788,17 +889,32 @@ class SimBackend:
         ledger.append(seq, ev.t, ev.kind, node,
                       "node-failed" if failure else "scaled-in",
                       {"blocking_s": res.delay_s, **det})
+        self.policy.observe("handling", res.delay_s)
+        self.policy.observe("detection", det.get("detection_s"))
+        # Failures pick a recovery action *before* the world is patched up:
+        # the context must see checkpoint freshness as it was at death.
+        action = None
+        if failure:
+            ctx = self._failure_context(node, ev, det)
+            dec = self.policy.decide(ctx)
+            self._record_decision(seq, ledger, ctx, dec)
+            action = dec.action
         # Membership changed: an in-flight reshard was planned against the
         # old membership and is stale in full.
         self._cancel_reshard(ledger, "membership-changed")
         # The departure may have severed in-flight shard streams.
-        self._replan_touched(ledger, node=node)
+        self._replan_touched(ledger, node=node, seq=seq)
         if self.ckpt is not None:
-            # Credit a touched checkpoint push, drop holder state, and run
-            # the configured recovery path on failures. Detected failures
-            # were already counted as faults at injection time.
+            # Credit a touched checkpoint push and drop holder state.
+            # Detected failures were already counted as faults at injection.
             self.ckpt.on_node_event(seq, node, failure=failure,
                                     omniscient=not det)
+        if failure:
+            if action == "park-and-degrade":
+                self._park_and_degrade(seq, node, ledger)
+            elif self.ckpt is not None and action in (
+                    "restore-replica", "restore-checkpoint"):
+                self.ckpt.restore(seq, node, action)
         self._after_membership_change(seq, ledger, ev.reshard, ev.new_shape)
 
     def _on_link_join(self, seq: int, ev: ChurnEvent, ledger: EventLedger):
@@ -829,7 +945,7 @@ class SimBackend:
                     "bandwidth_mbps": link.bandwidth_mbps,
                     "latency_s": link.latency_s,
                 })
-                self._replan_touched(ledger, link=(u, v))
+                self._replan_touched(ledger, link=(u, v), seq=seq)
                 self._replan_reshard_touched(ledger, link=(u, v))
                 return
             ledger.append(seq, ev.t, ev.kind, (u, v), "skipped-link-exists")
@@ -859,7 +975,9 @@ class SimBackend:
         ledger.append(seq, ev.t, ev.kind, (u, v),
                       "link-failed" if failure else "link-disconnected",
                       {"blocking_s": res.delay_s, **det})
-        self._replan_touched(ledger, link=(u, v))
+        self.policy.observe("handling", res.delay_s)
+        self.policy.observe("detection", det.get("detection_s"))
+        self._replan_touched(ledger, link=(u, v), seq=seq)
         self._replan_reshard_touched(ledger, link=(u, v))
         if self.ckpt is not None:
             self.ckpt.on_link_event((u, v))
@@ -887,7 +1005,7 @@ class SimBackend:
             "bandwidth_mbps": link.bandwidth_mbps,
             "latency_s": link.latency_s,
         })
-        self._replan_touched(ledger, link=(u, v))
+        self._replan_touched(ledger, link=(u, v), seq=seq)
         self._replan_reshard_touched(ledger, link=(u, v))
         if self.ckpt is not None:
             # The push's precomputed timing rode the old rate: cancel with
@@ -978,6 +1096,9 @@ class SimBackend:
             # injection (detection just reveals them later).
             self.ckpt.note_fault()
         self._fault_seq[("node", node)] = seq
+        if ev.recovery is not None:
+            # Honored when the monitor detects the death this fault causes.
+            self._fault_recovery[("node", node)] = ev.recovery
         ledger.append(seq, ev.t, ev.kind, node, "fault-injected")
 
     def _on_link_fault(self, seq: int, ev: ChurnEvent, ledger: EventLedger):
@@ -1048,6 +1169,8 @@ class SimBackend:
             self.ckpt.note_fault()
         self._sched_fault_seq = seq
         self._fault_seq[("node", home)] = seq
+        if ev.recovery is not None:
+            self._fault_recovery[("node", home)] = ev.recovery
         ledger.append(seq, ev.t, ev.kind, home, "fault-injected",
                       {"deputies": sorted(self.control.replicas)})
 
@@ -1092,6 +1215,8 @@ class SimBackend:
             if self.ckpt is not None:
                 self.ckpt.note_fault()
             self._fault_seq[("node", node)] = seq
+            if ev.recovery is not None:
+                self._fault_recovery[("node", node)] = ev.recovery
             ledger.append(seq, ev.t, ev.kind, node, "deferred-leaderless",
                           {"as": "node-fault"})
             return
@@ -1150,14 +1275,28 @@ class SimBackend:
                           "terms_tried": result.terms_tried,
                           "replica_version": result.replica_version,
                       })
-        # Re-adoption: scale-outs in the winner's replica continue
-        # untouched (delivered bytes stay credited); ones that began after
-        # its last sync are rebuilt via a credit-aware re-plan.
+        self.policy.observe("election", result.election_s)
+        self.policy.observe("detection", result.detection_s)
+        # Re-adoption: the new leader re-evaluates each in-flight recovery
+        # under its own measured costs. Adopt (scale-outs in the winner's
+        # replica continue untouched, delivered bytes stay credited) or
+        # rebuild via a credit-aware re-plan — a scale-out missing from the
+        # winner's replica can never be adopted (no plan to adopt).
         known = result.replicated_inflight
         for fl in list(self.inflight):
             jseq = self._inflight_seq.get(fl.new_node, -1)
+            ctx = FaultContext(
+                kind="re-adoption", t=now, subject=(fl.new_node,),
+                n_active=len(self.topo.active_nodes()),
+                min_active=self.min_active,
+                state_bytes=self.cluster.state_bytes,
+                inflight_credit_bytes=fl.credited_bytes(),
+                link_mbps=self._link_classes(),
+                replicated=fl.new_node in known)
+            dec = self.policy.decide(ctx)
+            self._record_decision(jseq, ledger, ctx, dec)
             info = self.sched.re_adopt_scale_out(
-                fl, replicated=fl.new_node in known)
+                fl, adopt=(dec.action is None))
             if info is None:
                 self.inflight.remove(fl)
                 self._inflight_seq.pop(fl.new_node, None)
@@ -1247,7 +1386,7 @@ def run_trace_sim(cluster: SimCluster, events: Iterable[ChurnEvent],
                   codec: str = wire_codec.CODEC_NONE,
                   checkpoint: Optional[str] = None,
                   ckpt_interval_s: Optional[float] = None,
-                  recovery: str = "replica",
+                  policy="fixed",
                   accounting: bool = False,
                   reshard: str = "never",
                   reshard_policy: Optional[ReshardPolicy] = None,
@@ -1260,7 +1399,7 @@ def run_trace_sim(cluster: SimCluster, events: Iterable[ChurnEvent],
                                     detector=detector, codec=codec,
                                     checkpoint=checkpoint,
                                     ckpt_interval_s=ckpt_interval_s,
-                                    recovery=recovery, accounting=accounting,
+                                    policy=policy, accounting=accounting,
                                     reshard=reshard,
                                     reshard_policy=reshard_policy))
     ledger = engine.run(events)

@@ -257,11 +257,13 @@ class SimCheckpointTier:
     *contending* data transfer. Churn touching the push's route (or either
     endpoint) cancels it with the same shard-aligned credit replication
     streams get — the credited prefix survives on the holder and the resumed
-    push moves only the missing bytes. A node *failure* triggers the
-    configured recovery path: ``recovery="replica"`` restores from neighbor
-    replicas for free (synchronous-DP state survives — the paper's §III
-    premise), ``recovery="checkpoint"`` pays a restore read from the holder
-    plus all work since the last completed checkpoint (``lost`` BadPut).
+    push moves only the missing bytes. On a node failure the tier executes
+    whichever restore action the backend's recovery policy chose
+    (:meth:`restore`): ``restore-replica`` re-seeds from neighbor replicas
+    for free (synchronous-DP state survives — the paper's §III premise),
+    ``restore-checkpoint`` pays a restore read from the holder plus all work
+    since the last completed checkpoint (``lost`` BadPut). The tier decides
+    nothing — selection lives in ``repro.core.recovery``.
 
     Every started push reaches exactly one terminal record
     (``ckpt-complete`` / ``ckpt-cancelled``); all records use the
@@ -270,16 +272,12 @@ class SimCheckpointTier:
 
     def __init__(self, backend, *, cadence: str = "adaptive",
                  interval_s: Optional[float] = None,
-                 snapshot_s: float = CKPT_SNAPSHOT_S,
-                 recovery: str = "replica"):
+                 snapshot_s: float = CKPT_SNAPSHOT_S):
         if cadence not in ("fixed", "adaptive"):
             raise ValueError(f"unknown checkpoint cadence {cadence!r}")
-        if recovery not in ("replica", "checkpoint"):
-            raise ValueError(f"unknown recovery tier {recovery!r}")
         self.backend = backend
         self.cluster = backend.cluster
         self.cadence = cadence
-        self.recovery = recovery
         self.snapshot_s = float(snapshot_s)
         self.base_interval_s = float(CKPT_BASE_INTERVAL_S
                                      if interval_s is None else interval_s)
@@ -439,6 +437,7 @@ class SimCheckpointTier:
         self._push = None
         self.completed += 1
         self._costs.append(self.snapshot_s)
+        self.backend.policy.observe("snapshot", self.snapshot_s)
         self._carry = 0
         self.last_ckpt = {"t": t, "holder": push["holder"]}
         if self._ledger is not None:
@@ -498,8 +497,9 @@ class SimCheckpointTier:
     def on_node_event(self, seq: int, node: int, *, failure: bool,
                       omniscient: bool):
         """A node left the cluster (graceful or failed, omniscient or
-        detected). Credit any touched push, drop holder state, and run the
-        recovery path on failures."""
+        detected). Credit any touched push and drop holder state; the
+        engine executes the policy-chosen restore separately
+        (:meth:`restore`)."""
         now = self.sim.now
         if failure and omniscient:
             # Detected failures were counted at fault injection.
@@ -511,8 +511,6 @@ class SimCheckpointTier:
             # The durable copy died with its holder; the next restore is
             # cold until a fresh push completes.
             self.last_ckpt = None
-        if failure:
-            self._restore(seq, node, now)
 
     def on_link_event(self, link: Tuple[int, int]):
         """A route link died or changed rate mid-push: cancel with credit
@@ -523,10 +521,17 @@ class SimCheckpointTier:
 
     # -- recovery ------------------------------------------------------------
 
-    def _restore(self, seq: int, dead_node: int, now: float):
+    def restore(self, seq: int, dead_node: int, action: str):
+        """Execute the restore action the recovery policy chose for a node
+        failure (``restore-replica`` / ``restore-checkpoint``). Measured
+        restore and lost-work costs feed straight back into the policy's
+        online cost model — the calibration loop Chameleon prescribes."""
+        if action not in ("restore-replica", "restore-checkpoint"):
+            raise ValueError(f"unknown restore action {action!r}")
+        now = self.sim.now
         if self._ledger is None:
             return
-        if self.recovery == "replica":
+        if action == "restore-replica":
             # Synchronous-DP state survives on the neighbor replicas
             # (MemoryReplicaStore tier): nothing is lost, nothing is read
             # back — the record exists so the A/B against checkpoint
@@ -549,6 +554,7 @@ class SimCheckpointTier:
                                     "lost_from": lost_from, "lost_to": now,
                                     "cold": True,
                                 })
+            self.backend.policy.observe("lost", now - lost_from)
             self._cold_base = now
             return
         nbytes = max(int(self.cluster.state_bytes), 1)
@@ -566,6 +572,8 @@ class SimCheckpointTier:
                                         "lost_to": t_req,
                                         "holder": holder,
                                     })
+            self.backend.policy.observe("restore-checkpoint", t - t_req)
+            self.backend.policy.observe("lost", t_req - lost_from)
 
         # Contending, non-daemon: the restore read is real recovery work
         # and must drain before the run ends.

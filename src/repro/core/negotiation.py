@@ -224,19 +224,20 @@ class ChaosScheduler:
         self._update_sync_policy()
 
     def re_adopt_scale_out(self, fl: "InflightScaleOut",
-                           *, replicated: bool) -> Optional[dict]:
+                           *, adopt: bool) -> Optional[dict]:
         """The elected leader takes ownership of an in-flight replication
         after fail-over.
 
-        ``replicated`` — the scale-out was in the winner's deputy replica:
-        adopt it in place. Streams keep flowing (they never depended on the
-        dead leader) and every delivered byte stays credited; only the
-        finalization, which needs a live leader, was waiting. Otherwise the
-        scale-out began after the winner's last sync: the new leader has no
-        record of it and must rebuild the plan — ``replan_scale_out``
-        re-plans the missing bytes, crediting the delivered prefix the
-        joining node itself reports (§IV-C delta recovery — the bytes live
-        on the joiner, not in the dead leader's memory).
+        ``adopt`` — the recovery policy's verdict (``repro.core.recovery``,
+        "re-adoption" context: it can only be True when the scale-out was
+        in the winner's deputy replica): adopt it in place. Streams keep
+        flowing (they never depended on the dead leader) and every
+        delivered byte stays credited; only the finalization, which needs a
+        live leader, was waiting. Otherwise the plan must be rebuilt —
+        ``replan_scale_out`` re-plans the missing bytes, crediting the
+        delivered prefix the joining node itself reports (§IV-C delta
+        recovery — the bytes live on the joiner, not in the dead leader's
+        memory).
 
         Returns the adoption accounting for the ledger, or None when the
         rebuild found no surviving neighbors and aborted."""
@@ -244,10 +245,10 @@ class ChaosScheduler:
         # window: a replication that drained then is complete at install
         # time, not before (the ready record must postdate the election).
         fl.t_last_credit = max(fl.t_last_credit, self.sim.now)
-        if not replicated and not self.replan_scale_out(fl):
+        if not adopt and not self.replan_scale_out(fl):
             return None
         return {
-            "re_adoption": "adopted" if replicated else "rebuilt",
+            "re_adoption": "adopted" if adopt else "rebuilt",
             "delivered_bytes": fl.delivered_bytes(),
             "credited_bytes": fl.credited_bytes(),
             "replans": fl.replans,

@@ -670,7 +670,12 @@ def decide_reshard(policy: ReshardPolicy,
     pure DP); ``decision`` is None to stay on the baseline, or a dict with
     the chosen plan, both step times, and the pure ``moved_bytes`` both
     substrates ledger identically. A trace event's ``new_shape`` pins the
-    target layout when it matches the surviving device count."""
+    target layout when it matches the surviving device count.
+
+    Callers do not invoke this directly on membership change: the
+    recovery-policy layer (``repro.core.recovery``) routes here when it
+    selects the ``reshard`` action, so the go/no-go is one ledgered
+    decision alongside restore and park."""
     mode = policy.mode if mode is None else mode
     if mode not in RESHARD_MODES:
         raise ValueError(f"unknown reshard mode {mode!r}")

@@ -43,10 +43,8 @@ from repro.core.engine import MIN_LINK_MBPS, ChurnEngine, ChurnEvent, EventLedge
 from repro.core.plans import (
     ParallelismPlan,
     ReshardPolicy,
-    decide_reshard,
-    default_reshard_policy,
-    reshard_moved_bytes,
 )
+from repro.core.recovery import FaultContext, decision_detail, make_policy
 from repro.core.replication import (
     decode_state,
     encode_state,
@@ -467,18 +465,22 @@ class ElasticTrainer:
                         reshard_policy: Optional[ReshardPolicy] = None,
                         state_bytes: int = 0,
                         tensor_sizes: Optional[Sequence[int]] = None,
+                        policy="fixed",
                         ) -> EventLedger:
         """Drive this trainer with a churn trace through the same
         :class:`~repro.core.engine.ChurnEngine` pipeline the simulator uses.
-        Returns the event ledger; per-event wall times land in
-        ``self.events`` (ScaleEvent list) as before."""
+        ``policy`` selects the recovery policy (``repro.core.recovery``) —
+        the same spec handed to ``SimBackend`` yields the same decisions on
+        the same trace. Returns the event ledger; per-event wall times land
+        in ``self.events`` (ScaleEvent list) as before."""
         engine = ChurnEngine(TrainerBackend(self, batch_fn=batch_fn,
                                             steps_between=steps_between,
                                             min_active=min_active,
                                             reshard=reshard,
                                             reshard_policy=reshard_policy,
                                             state_bytes=state_bytes,
-                                            tensor_sizes=tensor_sizes))
+                                            tensor_sizes=tensor_sizes,
+                                            policy=policy))
         return engine.run(events)
 
     # -- stragglers ------------------------------------------------------------------
@@ -531,7 +533,8 @@ class TrainerBackend:
                  reshard: str = "never",
                  reshard_policy: Optional[ReshardPolicy] = None,
                  state_bytes: int = 0,
-                 tensor_sizes: Optional[Sequence[int]] = None):
+                 tensor_sizes: Optional[Sequence[int]] = None,
+                 policy="fixed"):
         self.trainer = trainer
         self.batch_fn = batch_fn
         self.steps_between = steps_between
@@ -540,17 +543,19 @@ class TrainerBackend:
         self._node_device: Dict[int, object] = {}  # trace node id -> device
         self._departed: set = set()  # trace nodes that already left/failed
         self._link_faulted: set = set()  # trace links with an applied fault
-        # Parallelism-plan resharding: the trainer backend runs the *same*
-        # pure decision function as SimBackend (decide_reshard over trace
-        # membership + byte counts), so one trace yields identical reshard
-        # records on both substrates; the chosen tp is then applied on real
-        # arrays when it divides the live device count. ``state_bytes`` /
-        # ``tensor_sizes`` parameterize the shared step-time model — pass
-        # the simulated cluster's values for cross-substrate parity.
-        self.reshard_mode = str(reshard)
-        self.reshard_policy = (reshard_policy if reshard_policy is not None
-                               else default_reshard_policy(
-                                   reshard, int(state_bytes) or 1))
+        # Unified recovery policy: the trainer backend runs the *same* pure
+        # decision layer as SimBackend (repro.core.recovery over trace
+        # membership + byte counts), so one trace yields identical
+        # ``recovery-decided`` / reshard decisions on both substrates
+        # (``recovery.decision_digest`` pins the parity); the chosen tp is
+        # then applied on real arrays when it divides the live device
+        # count. ``state_bytes`` / ``tensor_sizes`` parameterize the shared
+        # step-time model — pass the simulated cluster's values for
+        # cross-substrate parity.
+        self.policy = make_policy(policy, reshard=reshard,
+                                  reshard_policy=reshard_policy,
+                                  state_bytes=int(state_bytes) or 1)
+        self.degraded = False
         self.state_bytes = int(state_bytes)
         self.tensor_sizes = list(tensor_sizes or ())
         self.plan: Optional[ParallelismPlan] = None
@@ -706,6 +711,30 @@ class TrainerBackend:
                           "node-failed" if failure else "scaled-in", detail)
             self._members.discard(ev.node if ev.node in self._members
                                   else device.id)
+            if failure:
+                # The same per-fault-class selection SimBackend runs: build
+                # the substrate-independent context fields, decide, record.
+                # Execution differs by substrate (state already lives on
+                # the surviving replicas here; there is no wire to restore
+                # over), but the *choice* — what decision_digest projects —
+                # must match the simulator's.
+                ctx = FaultContext(
+                    kind="node-failure", t=ev.t, subject=(ev.node,),
+                    n_active=len(tr.active), min_active=self.min_active,
+                    state_bytes=self.state_bytes,
+                    replica_feasible=(self.plan is None or self.plan.dp > 1),
+                    ckpt_available=(getattr(tr, "checkpointer", None)
+                                    is not None),
+                    override=ev.recovery)
+                dec = self.policy.decide(ctx)
+                self._record_decision(seq, ev.t, ledger, ctx, dec)
+                if dec.action == "park-and-degrade":
+                    # No restore: train on without the dead device's
+                    # redundancy. Terminal record mirrors the simulator's.
+                    self.degraded = True
+                    ledger.append(seq, ev.t, "recovery", ev.node,
+                                  "parked-degraded",
+                                  {"n_active": len(tr.active)})
             self._maybe_reshard(seq, ev, ledger)
             return
         # Link events: project the trace link onto its endpoint devices'
@@ -743,40 +772,43 @@ class TrainerBackend:
             detail["detected"] = True
         ledger.append(seq, ev.t, ev.kind, (ev.u, ev.v), action, detail)
 
+    def _record_decision(self, seq: int, t: float, ledger: EventLedger,
+                         ctx: FaultContext, dec) -> None:
+        """Mirror of ``SimBackend._record_decision``: silent policies write
+        nothing (pre-policy ledgers stay byte-identical), adaptive/forced
+        choices become ``recovery-decided`` records whose parity projection
+        (``recovery.decision_digest``) matches the simulator's."""
+        if not (self.policy.records or dec.forced):
+            return
+        ledger.append(seq, t, "recovery", ctx.subject, "recovery-decided",
+                      decision_detail(ctx, dec))
+
     def _maybe_reshard(self, seq: int, ev: ChurnEvent, ledger: EventLedger):
-        """The trainer side of parallelism-plan resharding: run the shared
-        ``decide_reshard`` over trace membership, ledger the decision with
-        the *pure* ``moved_bytes`` (identical to SimBackend's), and apply
-        the chosen tp on real arrays. There is no virtual clock, so
-        ``reshard-ready`` lands immediately after ``reshard-started``
-        (recovery *time* is the simulator's job; layout parity is this
-        one's)."""
-        mode = ev.reshard if ev.reshard is not None else self.reshard_mode
-        if mode == "never" and (self.plan is None or self.plan.tp == 1):
+        """The trainer side of parallelism-plan resharding: route the
+        membership change through the shared recovery policy (the same
+        ``evaluate_membership`` SimBackend consults, forced replicate-only
+        fall-back included), ledger the decision with the *pure*
+        ``moved_bytes`` (identical to SimBackend's), and apply the chosen
+        tp on real arrays. There is no virtual clock, so ``reshard-ready``
+        lands immediately after ``reshard-started`` (recovery *time* is the
+        simulator's job; layout parity is this one's)."""
+        coord = self.coordinator_device()
+        devices = tuple(sorted(self._members))
+        ctx = FaultContext(
+            kind="membership-change", t=ev.t,
+            subject=(coord.id if coord is not None else -1,),
+            n_active=len(devices), min_active=self.min_active,
+            state_bytes=self.state_bytes,
+            plan=self.plan, reshard_mode=ev.reshard,
+            pinned_shape=ev.new_shape, devices=devices,
+            tensor_sizes=tuple(self.tensor_sizes))
+        dec = self.policy.decide(ctx)
+        self._record_decision(seq, ev.t, ledger, ctx, dec)
+        if dec.reshard is None:
+            if dec.baseline is not None and self.plan is not None:
+                self.plan = dec.baseline
             return
-        devices = sorted(self._members)
-        if not devices:
-            return
-        decision, baseline = decide_reshard(
-            self.reshard_policy, self.plan, devices, self.state_bytes,
-            self.tensor_sizes, mode=mode, pinned_shape=ev.new_shape)
-        if decision is None:
-            if self.plan is not None and self.plan.tp > 1:
-                decision = {
-                    "plan": baseline,
-                    "step_s": self.reshard_policy.step_time(
-                        baseline, self.state_bytes, self.tensor_sizes),
-                    "baseline_step_s": self.reshard_policy.step_time(
-                        baseline, self.state_bytes, self.tensor_sizes),
-                    "moved_bytes": reshard_moved_bytes(
-                        self.plan, baseline, self.state_bytes),
-                    "old_shape": self.plan.signature(),
-                    "new_shape": baseline.signature(),
-                }
-            else:
-                if self.plan is not None:
-                    self.plan = baseline
-                return
+        decision = dec.reshard
         cand: ParallelismPlan = decision["plan"]
         tr = self.trainer
         coord = self.coordinator_device()

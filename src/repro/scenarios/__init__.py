@@ -9,6 +9,7 @@ from repro.scenarios.generators import (
     diurnal_waves,
     flash_crowd,
     link_flaps,
+    mixed_faults,
     poisson_churn,
     regional_partition,
     reshard_churn,
@@ -27,6 +28,7 @@ __all__ = [
     "adversarial_churn",
     "bandwidth_degradation",
     "checkpointed_training",
+    "mixed_faults",
     "silent_failures",
     "detector_stress",
     "scheduler_churn",

@@ -49,6 +49,10 @@ Catalog:
   pushes ride the same contended network as the failures they insure
   against (checkpoint events are no-ops unless the engine runs with a
   checkpoint tier attached).
+* ``mixed_faults``       — every fault class in one trace: silent node
+  faults, lossy links, a scheduler fault, periodic checkpoint pushes, and
+  interleaved joins — the recovery-policy A/B workload where no single
+  standing action choice is right for every event.
 """
 from __future__ import annotations
 
@@ -667,6 +671,78 @@ def checkpointed_training(
                          })
 
 
+def mixed_faults(
+    topo: Topology, *, seed: int, horizon_s: float,
+    n_node_faults: int = 2, n_link_loss: int = 2, loss_rate: float = 0.5,
+    n_scheduler_faults: int = 1, ckpt_every_s: float = 25.0,
+    jitter_s: float = 0.5, n_joins: int = 2,
+    recovery: Optional[str] = None, max_links: int = 3,
+    bw_range=DEFAULT_BW_RANGE, lat_range=DEFAULT_LAT_RANGE,
+    compute_range=DEFAULT_COMPUTE_RANGE,
+) -> ScenarioTrace:
+    """Every fault class in one trace — the recovery-policy A/B workload.
+
+    Interleaves ``n_node_faults`` silent node faults (detection + node
+    recovery), ``n_link_loss`` lossy links at ``loss_rate`` (stream churn
+    and credit re-plans), one scheduler fault ~55% into the horizon
+    (election + re-adoption), periodic trace-borne ``checkpoint`` pushes
+    every ``ckpt_every_s`` (the cold tier's insurance premium), and
+    ``n_joins`` scale-outs keeping replication traffic on the contended
+    wire. No single standing recovery action is right for all of these:
+    the trace exists so fixed policies and the adaptive selector can be
+    A/B'd head-to-head (``benchmarks/recovery_policy.py``).
+
+    ``recovery`` optionally annotates every node-fault with a forced
+    per-event action (e.g. ``"park-and-degrade"``) — the per-event
+    override mirror of the ``reshard`` annotation. Node-fault victims
+    exclude the scheduler node (its failure mode is the scheduler-fault)
+    and lossy links avoid the victims, same as ``silent_failures``."""
+    rng = random.Random(seed)
+    nodes = sorted(topo.active_nodes())
+    home = min(nodes) if nodes else None
+    events: List[ChurnEvent] = []
+    pool = [n for n in nodes if n != home]
+    victims = rng.sample(pool, min(n_node_faults, max(len(pool) - 1, 0)))
+    for n in sorted(victims):
+        events.append(ChurnEvent(t=rng.uniform(0, horizon_s),
+                                 kind="node-fault", node=n,
+                                 recovery=recovery))
+    victim_set = set(victims)
+    edges = [(min(u, v), max(u, v)) for u, v in sorted(topo.g.edges)
+             if not ({u, v} & victim_set)]
+    rng.shuffle(edges)
+    k = min(n_link_loss, len(edges))
+    for u, v in edges[:k]:
+        events.append(ChurnEvent(t=rng.uniform(0, horizon_s),
+                                 kind="link-loss", u=u, v=v,
+                                 loss_rate=loss_rate))
+    for i in range(n_scheduler_faults):
+        events.append(ChurnEvent(t=(0.55 + 0.2 * i) * horizon_s,
+                                 kind="scheduler-fault", node=home))
+    n_ckpts = 0
+    tc = ckpt_every_s
+    while tc < horizon_s:
+        events.append(ChurnEvent(t=tc + rng.uniform(-jitter_s, jitter_s),
+                                 kind="checkpoint"))
+        n_ckpts += 1
+        tc += ckpt_every_s
+    m = _Membership(nodes, rng)
+    for _ in range(n_joins):
+        events.append(_join_event(rng.uniform(0, horizon_s), m, rng,
+                                  max_links=max_links, min_links=2,
+                                  bw_range=bw_range, lat_range=lat_range,
+                                  compute_range=compute_range))
+    return ScenarioTrace("mixed-faults", seed,
+                         sorted(events, key=lambda e: e.t), {
+                             "n_node_faults": len(victims),
+                             "n_link_loss": k, "loss_rate": loss_rate,
+                             "n_scheduler_faults": n_scheduler_faults,
+                             "ckpt_every_s": ckpt_every_s,
+                             "n_ckpts": n_ckpts, "n_joins": n_joins,
+                             "recovery": recovery, "horizon_s": horizon_s,
+                         })
+
+
 GENERATORS = {
     "poisson-churn": poisson_churn,
     "diurnal-waves": diurnal_waves,
@@ -680,4 +756,5 @@ GENERATORS = {
     "scheduler-churn": scheduler_churn,
     "reshard-churn": reshard_churn,
     "checkpointed-training": checkpointed_training,
+    "mixed-faults": mixed_faults,
 }

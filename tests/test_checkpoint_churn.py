@@ -90,7 +90,8 @@ def test_checkpoint_recovery_ledgers_restore_and_lost_window():
     # Let one checkpoint complete (~t0+3.9), then crash non-holder node 2.
     events = [ChurnEvent(t=t0 + 8.0, kind="node-failure", node=2)]
     ledger, _ = run_trace_sim(cl, events, checkpoint="fixed",
-                              ckpt_interval_s=1.0, recovery="checkpoint")
+                              ckpt_interval_s=1.0,
+                              policy="fixed-checkpoint")
     assert _records(ledger, "ckpt-complete")
     restored = _records(ledger, "ckpt-restored")
     assert len(restored) == 1
@@ -108,7 +109,7 @@ def test_replica_recovery_is_instant_and_lossless():
     t0 = cl.sim.now
     events = [ChurnEvent(t=t0 + 8.0, kind="node-failure", node=2)]
     ledger, _ = run_trace_sim(cl, events, checkpoint="fixed",
-                              ckpt_interval_s=1.0, recovery="replica")
+                              ckpt_interval_s=1.0, policy="fixed-replica")
     restored = _records(ledger, "replica-restored")
     assert len(restored) == 1
     assert restored[0].detail["restore_s"] == 0.0
@@ -178,14 +179,18 @@ def test_fixed_cadence_ignores_fault_rate():
     assert tier.current_interval() == CKPT_BASE_INTERVAL_S
 
 
-def test_tier_rejects_unknown_cadence_and_recovery():
+def test_tier_rejects_unknown_cadence_and_policy():
     cl = _ckpt_cluster()
     cl.train(1)
     be = SimBackend(cl)
     with pytest.raises(ValueError):
         SimCheckpointTier(be, cadence="hourly")
+    # The old per-tier recovery knob is gone; action selection lives in the
+    # policy layer, which rejects unknown specs and restore actions.
     with pytest.raises(ValueError):
-        SimCheckpointTier(be, recovery="tape")
+        SimBackend(_ckpt_cluster(), policy="tape")
+    with pytest.raises(ValueError):
+        SimCheckpointTier(be).restore(0, 1, "restore-tape")
 
 
 # ---------------------------------------------------------------------------

@@ -372,13 +372,18 @@ def test_json_roundtrip_every_event_kind():
         ChurnEvent(t=3.0, kind="node-failure", node=3),
         ChurnEvent(t=3.5, kind="node-failure", node=8, reshard="always",
                    new_shape=(2, 4)),
+        # Per-event recovery override: the action annotation must survive
+        # the wire; events without it stay clean (is-None gate).
+        ChurnEvent(t=3.75, kind="node-failure", node=9,
+                   recovery="park-and-degrade"),
         ChurnEvent(t=4.0, kind="link-join", u=1, v=4,
                    bandwidth_mbps=300.0, latency_s=0.0),
         ChurnEvent(t=5.0, kind="link-leave", u=1, v=4),
         ChurnEvent(t=6.0, kind="link-failure", u=2, v=6),
         ChurnEvent(t=7.0, kind="link-degrade", u=2, v=6,
                    bandwidth_mbps=51.2, latency_s=0.02),
-        ChurnEvent(t=8.0, kind="node-fault", node=7),
+        ChurnEvent(t=8.0, kind="node-fault", node=7,
+                   recovery="restore-checkpoint"),
         ChurnEvent(t=9.0, kind="link-fault", u=0, v=3),
         ChurnEvent(t=10.0, kind="link-loss", u=0, v=5, loss_rate=0.35),
         # Election-ledger fields: term/new_home/election_s must survive the
@@ -412,6 +417,22 @@ def test_scheduler_fault_minimal_and_full_roundtrip():
     assert back == full
     assert back.term == 7 and back.new_home == 2
     assert back.election_s == 0.125
+
+
+def test_recovery_annotation_round_trip_and_absent_when_none():
+    """Unannotated events keep a clean wire format (is-None gate, so old
+    traces replay byte-identically); annotated ones survive the trip and
+    unknown actions are rejected at construction."""
+    bare = ChurnEvent(t=1.0, kind="node-failure", node=3)
+    assert "recovery" not in bare.to_json()
+    assert ChurnEvent.from_json(bare.to_json()).recovery is None
+    forced = ChurnEvent(t=1.0, kind="node-fault", node=3,
+                        recovery="restore-replica")
+    wire = json.loads(json.dumps(forced.to_json()))
+    assert wire["recovery"] == "restore-replica"
+    assert ChurnEvent.from_json(wire) == forced
+    with pytest.raises(ValueError):
+        ChurnEvent(t=0.0, kind="node-failure", node=1, recovery="reboot")
 
 
 def test_empty_links_keeps_compute_s():

@@ -85,7 +85,7 @@ def test_components_sum_with_checkpoint_tier_active():
     cl = _cluster()
     cl.train(1)
     ledger, _, report = run_trace_goodput(
-        cl, trace, checkpoint="adaptive", recovery="checkpoint")
+        cl, trace, checkpoint="adaptive", policy="fixed-checkpoint")
     assert math.fsum(report.components.values()) == pytest.approx(
         report.total_s, abs=1e-6)
     assert "ckpt-started" in ledger.actions()
@@ -101,24 +101,24 @@ def test_components_sum_with_checkpoint_tier_active():
 # ---------------------------------------------------------------------------
 
 
-def _report_json(checkpoint=None, recovery="replica"):
+def _report_json(checkpoint=None, policy="fixed"):
     trace = _traces()["poisson"]
     cl = _cluster()
     cl.train(1)
     kw = {} if checkpoint is None else {"checkpoint": checkpoint,
-                                        "recovery": recovery}
+                                        "policy": policy}
     _, _, report = run_trace_goodput(cl, trace, **kw)
     return json.dumps(report.to_json(), sort_keys=True)
 
 
-@pytest.mark.parametrize("checkpoint,recovery", [
-    (None, "replica"),
-    ("fixed", "checkpoint"),
-    ("adaptive", "checkpoint"),
+@pytest.mark.parametrize("checkpoint,policy", [
+    (None, "fixed"),
+    ("fixed", "fixed-checkpoint"),
+    ("adaptive", "fixed-checkpoint"),
 ])
-def test_same_seed_report_byte_identical(checkpoint, recovery):
-    assert _report_json(checkpoint, recovery) == _report_json(checkpoint,
-                                                              recovery)
+def test_same_seed_report_byte_identical(checkpoint, policy):
+    assert _report_json(checkpoint, policy) == _report_json(checkpoint,
+                                                            policy)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,319 @@
+"""Unified recovery-policy layer (repro.core.recovery + every call site).
+
+Pins the PR's contracts:
+
+1. **Byte-identity of the default** — ``policy="fixed"`` replays the seeded
+   omniscient poisson trace to the exact pre-policy digest
+   (``PRE_RESHARD_DIGEST``): FixedPolicy writes no decision records and
+   reproduces the old hard-wired choices bit-for-bit.
+2. **Determinism of the adaptive path** — same seed ⇒ byte-identical
+   ledgers and decision digests, decisions ledgered with scored
+   alternatives.
+3. **Park-and-degrade** — terminal ``parked-degraded`` records, no restore
+   records, GoodPut components still ``fsum`` to the wall clock on
+   degraded runs.
+4. **Per-event override** — a trace-borne ``recovery=`` annotation forces
+   the action and records the decision even under the silent fixed chain.
+5. **Cross-substrate parity** — the simulator and the trainer backend
+   reach byte-identical decision digests on the same trace, free-choice
+   and forced alike.
+"""
+import math
+
+import pytest
+
+from repro.core import SimCluster, random_edge_topology, run_trace_sim
+from repro.core.engine import ChurnEngine, ChurnEvent, run_trace_goodput
+from repro.core.recovery import (
+    RECOVERY_ACTIONS,
+    AdaptivePolicy,
+    CostModel,
+    FaultContext,
+    FixedPolicy,
+    RecoveryPolicy,
+    chosen_actions,
+    decision_digest,
+    make_policy,
+)
+from repro.scenarios import mixed_faults, poisson_churn, reshard_churn
+from test_resharding import (
+    MB,
+    PRE_RESHARD_DIGEST,
+    _FakeTrainer,
+    _poisson_cluster_and_trace,
+)
+
+
+def _crash_cluster_and_trace(n=10, seed=3):
+    topo = random_edge_topology(n, seed=seed)
+    cl = SimCluster(topo, state_bytes=16 * MB, tensor_sizes=[MB] * 16)
+    cl.train(1)
+    trace = poisson_churn(sorted(topo.active_nodes()), seed=seed + 4,
+                          horizon_s=200.0, rate_join=0.02, rate_leave=0.04,
+                          failure_fraction=1.0)
+    return cl, trace
+
+
+# ---------------------------------------------------------------------------
+# CostModel: priors, running means, calibration plumbing.
+# ---------------------------------------------------------------------------
+
+
+def test_cost_model_prior_then_running_mean():
+    cm = CostModel()
+    assert cm.estimate("detection") == CostModel.PRIORS["detection"]
+    assert cm.count("detection") == 0
+    cm.observe("detection", 2.0)
+    cm.observe("detection", 4.0)
+    assert cm.estimate("detection") == pytest.approx(3.0)
+    assert cm.count("detection") == 2
+    cm.observe("detection", None)  # unmeasured samples are ignored
+    assert cm.count("detection") == 2
+    assert cm.estimate("never-observed-key") == 0.0
+    assert cm.to_json() == {"detection": {"n": 2, "mean_s": 3.0}}
+
+
+# ---------------------------------------------------------------------------
+# Policy construction and context validation.
+# ---------------------------------------------------------------------------
+
+
+def test_make_policy_resolves_specs():
+    assert isinstance(make_policy("fixed"), FixedPolicy)
+    assert make_policy("fixed").name == "fixed-replica"
+    assert make_policy(None).name == "fixed-replica"
+    assert make_policy("fixed-checkpoint").prefer == "checkpoint"
+    assert make_policy("fixed-park").prefer == "park"
+    adaptive = make_policy("adaptive", reshard="auto")
+    assert isinstance(adaptive, AdaptivePolicy) and adaptive.records
+    inst = FixedPolicy("park")
+    assert make_policy(inst) is inst  # instance passthrough
+
+
+@pytest.mark.parametrize("bad", ["tape", "fixed-tape", "chameleon", 7])
+def test_make_policy_rejects_unknown_specs(bad):
+    with pytest.raises(ValueError):
+        make_policy(bad)
+
+
+def test_fault_context_validates_kind_and_override():
+    with pytest.raises(ValueError):
+        FaultContext(kind="meteor-strike", t=0.0, subject=(1,), n_active=4,
+                     min_active=2, state_bytes=1)
+    with pytest.raises(ValueError):
+        FaultContext(kind="node-failure", t=0.0, subject=(1,), n_active=4,
+                     min_active=2, state_bytes=1, override="reboot")
+
+
+def _failure_ctx(**kw):
+    base = dict(kind="node-failure", t=1.0, subject=(3,), n_active=6,
+                min_active=2, state_bytes=MB)
+    base.update(kw)
+    return FaultContext(**base)
+
+
+def test_fixed_policy_preference_chain_respects_feasibility():
+    replica = FixedPolicy("replica")
+    assert replica.decide(_failure_ctx()).action == "restore-replica"
+    assert replica.decide(_failure_ctx(
+        replica_feasible=False, ckpt_available=True,
+    )).action == "restore-checkpoint"
+    assert replica.decide(_failure_ctx(
+        replica_feasible=False)).action == "park-and-degrade"
+    ckpt = FixedPolicy("checkpoint")
+    assert ckpt.decide(_failure_ctx(
+        ckpt_available=True)).action == "restore-checkpoint"
+    assert ckpt.decide(_failure_ctx()).action == "restore-replica"
+    park = FixedPolicy("park")
+    assert park.decide(_failure_ctx(
+        ckpt_available=True)).action == "park-and-degrade"
+
+
+def test_adaptive_policy_scores_feasible_actions_and_picks_cheapest():
+    pol = AdaptivePolicy()
+    # Priors: a surviving replica restores for one handling charge — wins.
+    dec = pol.decide(_failure_ctx(ckpt_available=True, ckpt_age_s=1.0))
+    assert dec.action == "restore-replica"
+    assert set(dec.scores) == {"restore-replica", "restore-checkpoint",
+                               "park-and-degrade"}
+    # No replica: a fresh checkpoint beats parking 30 s of capacity.
+    dec = pol.decide(_failure_ctx(replica_feasible=False,
+                                  ckpt_available=True, ckpt_age_s=1.0))
+    assert dec.action == "restore-checkpoint"
+    # A cold tier (no push yet) prices in the full lost-work prior: park.
+    dec = pol.decide(_failure_ctx(replica_feasible=False,
+                                  ckpt_available=True, ckpt_age_s=None))
+    assert dec.action == "park-and-degrade"
+    # Nothing to restore from at all: parking is the only candidate.
+    dec = pol.decide(_failure_ctx(replica_feasible=False))
+    assert dec.action == "park-and-degrade"
+
+
+def test_adaptive_policy_recalibrates_from_observations():
+    pol = AdaptivePolicy()
+    # Measured restores come in far cheaper than parking; a stale
+    # checkpoint still loses to it until the observed costs say otherwise.
+    pol.observe("restore-checkpoint", 0.5)
+    pol.observe("handling", 40.0)  # handling got expensive: park pays 70
+    dec = pol.decide(_failure_ctx(replica_feasible=False,
+                                  ckpt_available=True, ckpt_age_s=10.0))
+    assert dec.action == "restore-checkpoint"
+    assert dec.scores["restore-checkpoint"] == pytest.approx(10.5)
+    assert dec.scores["park-and-degrade"] == pytest.approx(70.0)
+
+
+def test_override_forces_action_in_both_policies():
+    for pol in (FixedPolicy("replica"), AdaptivePolicy()):
+        dec = pol.decide(_failure_ctx(override="park-and-degrade"))
+        assert dec.action == "park-and-degrade" and dec.forced
+        # An infeasible override falls back to the policy's own choice.
+        dec = pol.decide(_failure_ctx(replica_feasible=False,
+                                      override="restore-replica"))
+        assert dec.action == "park-and-degrade" and not dec.forced
+
+
+# ---------------------------------------------------------------------------
+# Byte-identity: policy="fixed" replays the pre-policy digest.
+# ---------------------------------------------------------------------------
+
+
+def test_fixed_policy_replays_pre_policy_digest():
+    """The acceptance criterion: the explicit ``policy="fixed"`` spelling
+    of the default replays the seeded omniscient poisson trace to the
+    exact digest pinned before the recovery-policy layer existed."""
+    cl, trace = _poisson_cluster_and_trace()
+    ledger, _ = run_trace_sim(cl, trace, policy="fixed")
+    assert ledger.digest() == PRE_RESHARD_DIGEST
+    assert not any(r.action == "recovery-decided" for r in ledger)
+
+
+def test_same_seed_adaptive_runs_byte_identical():
+    def replay():
+        topo = random_edge_topology(10, seed=5)
+        cl = SimCluster(topo, state_bytes=16 * MB, tensor_sizes=[MB] * 16)
+        cl.train(1)
+        trace = mixed_faults(topo, seed=8, horizon_s=200.0)
+        return run_trace_sim(cl, list(trace), policy="adaptive",
+                             checkpoint="adaptive", reshard="auto")[0]
+
+    l1, l2 = replay(), replay()
+    assert l1.canonical_bytes() == l2.canonical_bytes()
+    assert decision_digest(l1) == decision_digest(l2)
+    decided = [r for r in l1 if r.action == "recovery-decided"]
+    assert decided, "adaptive run ledgered no decisions"
+    for r in decided:
+        assert r.detail["policy"] == "adaptive"
+        assert r.detail["context"] in ("node-failure", "stream-churn",
+                                       "membership-change", "re-adoption")
+        assert r.detail["chosen"] in RECOVERY_ACTIONS + (
+            "keep-layout", "adopt", "none")
+
+
+# ---------------------------------------------------------------------------
+# Park-and-degrade: terminal records, accounting conservation.
+# ---------------------------------------------------------------------------
+
+
+def test_park_and_degrade_terminal_records_and_conservation():
+    cl, trace = _crash_cluster_and_trace()
+    ledger, _, report = run_trace_goodput(cl, trace, policy="fixed-park",
+                                          checkpoint="adaptive")
+    parked = [r for r in ledger if r.action == "parked-degraded"]
+    failed = [r for r in ledger if r.action == "node-failed"]
+    assert parked and len(parked) == len(failed)
+    for r in parked:
+        assert r.detail["blocking_s"] >= 0.0
+        assert r.detail["sync_policy_version"] > 0
+    # Parked means parked: the tier restored nothing.
+    assert not any(r.action in ("replica-restored", "ckpt-restored")
+                   for r in ledger)
+    # Accounting never invents or loses time on a degraded run.
+    assert math.fsum(report.components.values()) == pytest.approx(
+        report.total_s, abs=1e-6)
+
+
+def test_park_override_records_even_under_silent_fixed_policy():
+    topo = random_edge_topology(10, seed=2)
+    cl = SimCluster(topo, state_bytes=16 * MB, tensor_sizes=[MB] * 16)
+    cl.train(1)
+    events = [
+        ChurnEvent(5.0, "node-failure", node=5,
+                   recovery="park-and-degrade"),
+        ChurnEvent(15.0, "node-failure", node=7),
+    ]
+    ledger, _ = run_trace_sim(cl, events, policy="fixed")
+    decided = [r for r in ledger if r.action == "recovery-decided"]
+    # Only the annotated event records (forced); the fixed chain's own
+    # choice on the second failure stays silent, as pre-policy replays
+    # require.
+    assert len(decided) == 1
+    assert decided[0].detail["chosen"] == "park-and-degrade"
+    assert decided[0].detail["forced"] is True
+    assert chosen_actions(ledger) == {"park-and-degrade": 1}
+    assert [r.subject for r in ledger if r.action == "parked-degraded"] \
+        == [(5,)]
+
+
+# ---------------------------------------------------------------------------
+# Cross-substrate parity: one trace, two substrates, same decisions.
+# ---------------------------------------------------------------------------
+
+
+def _trainer_ledger(trace, *, n=12, policy, state_bytes, tensor_sizes,
+                    reshard="never"):
+    from repro.elastic.trainer import TrainerBackend
+
+    tr = _FakeTrainer(n)
+    backend = TrainerBackend(tr, min_active=2, reshard=reshard,
+                             state_bytes=state_bytes,
+                             tensor_sizes=tensor_sizes, policy=policy)
+    return ChurnEngine(backend).run(list(trace)), backend
+
+
+def test_cross_substrate_decision_digest_parity_adaptive():
+    """The same spaced failure trace yields byte-identical decision
+    digests on the simulator and the trainer backend under the adaptive
+    policy — contexts, choices, and forced flags all line up; only the
+    substrate-local scores may differ."""
+    S, sizes = 64 * MB, [2 * MB] * 32
+    topo = random_edge_topology(12, seed=1)
+    trace = reshard_churn(sorted(topo.active_nodes()), seed=4,
+                          n_failures=4, n_joins=0)
+    cl = SimCluster(topo, state_bytes=S, tensor_sizes=sizes)
+    cl.train(1)
+    sim_ledger, _ = run_trace_sim(cl, trace, policy="adaptive",
+                                  reshard="auto")
+    tr_ledger, _ = _trainer_ledger(trace, policy="adaptive", state_bytes=S,
+                                   tensor_sizes=sizes, reshard="auto")
+    sim_n = sum(1 for r in sim_ledger if r.action == "recovery-decided")
+    tr_n = sum(1 for r in tr_ledger if r.action == "recovery-decided")
+    assert sim_n == tr_n > 0
+    assert decision_digest(sim_ledger) == decision_digest(tr_ledger)
+
+
+def test_cross_substrate_forced_park_parity():
+    """A trace-authored park annotation forces the same recorded decision
+    on both substrates, and both write the parked-degraded terminal."""
+    topo = random_edge_topology(12, seed=1)
+    events = [
+        ChurnEvent(5.0, "node-failure", node=5,
+                   recovery="park-and-degrade"),
+        ChurnEvent(20.0, "node-failure", node=7),
+    ]
+    cl = SimCluster(topo, state_bytes=32 * MB, tensor_sizes=[MB] * 32)
+    cl.train(1)
+    sim_ledger, _ = run_trace_sim(cl, events, policy="fixed")
+    tr_ledger, backend = _trainer_ledger(events, policy="fixed",
+                                         state_bytes=32 * MB,
+                                         tensor_sizes=[MB] * 32)
+    assert decision_digest(sim_ledger) == decision_digest(tr_ledger)
+    assert chosen_actions(sim_ledger) == chosen_actions(tr_ledger) \
+        == {"park-and-degrade": 1}
+    assert any(r.action == "parked-degraded" for r in tr_ledger)
+    assert backend.degraded
+
+
+def test_base_policy_requires_subclass_verdicts():
+    pol = RecoveryPolicy()
+    with pytest.raises(NotImplementedError):
+        pol.decide(_failure_ctx())
