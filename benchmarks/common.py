@@ -18,6 +18,8 @@ from pathlib import Path
 
 from repro.core.baselines import make_cluster, run_scale_out
 from repro.core.engine import ChurnEvent, run_trace_sim
+from repro.core.telemetry import detection_rows as telemetry_detection_rows
+from repro.core.telemetry import ttr_rows
 from repro.core.topology import Link, Topology, random_edge_topology
 
 MiB = 1024 * 1024
@@ -129,24 +131,11 @@ def measure_midstream_link_failure(n_nodes: int, state_bytes: int,
     }
 
 
-def detection_rows(ledger):
-    """Per-event detection/handling breakdown off a ledger: every handled
-    failure/departure with its ``detection_s`` (0 for omniscient events —
-    the trace told the engine directly) and ``handling_s`` (the blocking
-    portion, Table I semantics)."""
-    rows = []
-    for r in ledger:
-        if r.action in ("node-failed", "scaled-in", "link-failed",
-                        "link-disconnected"):
-            rows.append({
-                "kind": r.kind,
-                "subject": tuple(r.subject),
-                "fault_t": r.detail.get("fault_t"),
-                "detected_t": r.detail.get("detected_t"),
-                "detection_s": r.detail.get("detection_s", 0.0),
-                "handling_s": r.detail.get("blocking_s", 0.0),
-            })
-    return rows
+#: Per-event detection/handling breakdown off a ledger. The implementation
+#: moved to the telemetry layer (the span builder attaches the same rows to
+#: every SpanForest), so benchmarks and telemetry read one definition of
+#: what "detection_s" / "handling_s" span.
+detection_rows = telemetry_detection_rows
 
 
 def measure_detection_latency(n_nodes: int, state_bytes: int, tensor_sizes,
@@ -230,11 +219,13 @@ def measure_failure_recovery(n_nodes: int, state_bytes: int, tensor_sizes,
             if r["kind"] in ("node-failure", "node-fault")]
     detection_s = rows[0]["detection_s"] if rows else float("nan")
     handling_s = rows[0]["handling_s"] if rows else float("nan")
+    ttr = [r for r in ttr_rows(ledger) if r["fault_class"] == "node-failure"]
     join = results.get(0)
     return {
         "detection_s": detection_s,
         "handling_s": handling_s,
         "failure_to_recovery_s": detection_s + handling_s,
+        "ttr_s": ttr[0]["ttr_s"] if ttr else float("nan"),
         "join_delay_s": join.delay_s if join is not None else float("nan"),
         "events": detection_rows(ledger),
         "ledger": ledger,

@@ -4,7 +4,12 @@ plus the roofline report. ``PYTHONPATH=src python -m benchmarks.run``
 ``--summary`` skips execution and aggregates every ``BENCH_*.json``
 already at the repo root into one table: benchmark, section, headline
 metric, the first row's value (the baseline configuration), the best
-row's value, and the improvement factor.
+row's value, and the improvement factor. The same table is written to
+``BENCH_SUMMARY.md`` so the perf trajectory is reviewable in the repo.
+
+A full run finishes with ``tools/trace_report.py --smoke`` — the
+observability artifacts (``chaos-trace.json`` / ``metrics.prom`` /
+``report.md``) regenerate alongside the benchmark JSON.
 """
 from __future__ import annotations
 
@@ -100,6 +105,18 @@ def summary() -> int:
     print("  ".join(c.ljust(widths[c]) for c in cols))
     for r in rows:
         print("  ".join(str(r[c]).ljust(widths[c]) for c in cols))
+    md = ["# Benchmark summary", "",
+          "Aggregated from every `BENCH_*.json` at the repo root by "
+          "`benchmarks/run.py --summary`. Baseline is each table's first "
+          "row; best is the headline metric's winner.", "",
+          "| " + " | ".join(cols) + " |",
+          "|" + "|".join("---" for _ in cols) + "|"]
+    for r in rows:
+        md.append("| " + " | ".join(str(r[c]) for c in cols) + " |")
+    md.append("")
+    out = REPO_ROOT / "BENCH_SUMMARY.md"
+    out.write_text("\n".join(md))
+    print(f"\nwrote {out}")
     return 0
 
 
@@ -118,6 +135,17 @@ def main() -> int:
             failures += 1
             print(f"[{name}] FAILED:")
             traceback.print_exc()
+    print(f"\n{'='*72}\n== trace_report (tools.trace_report)\n{'='*72}")
+    try:
+        sys.path.insert(0, str(REPO_ROOT))
+        from tools import trace_report
+        if trace_report.main(["--smoke"]) != 0:
+            raise RuntimeError("trace_report --smoke failed")
+        print("[trace_report] ok")
+    except Exception:
+        failures += 1
+        print("[trace_report] FAILED:")
+        traceback.print_exc()
     print(f"\n{'='*72}\nbenchmarks: {len(BENCHMARKS) - failures}/{len(BENCHMARKS)} ok")
     return 1 if failures else 0
 

@@ -203,6 +203,19 @@ class ControlPlane:
         #: only when the overlay changed (bounded terms, no spin).
         self._no_quorum_version: Optional[int] = None
 
+    def metrics_snapshot(self) -> Dict:
+        """Point-in-time counter read for telemetry scrapes. Pure read."""
+        return {
+            "term": self.term,
+            "terms_this_fault": self.terms_this_fault,
+            "sync_wire_bytes": self.sync_wire_bytes,
+            "sync_datagrams": self.sync_datagrams,
+            "ack_datagrams": self.ack_datagrams,
+            "replicas": len(self.replicas),
+            "leaderless": self.leaderless,
+            "frozen": self.frozen,
+        }
+
     # -- lifecycle -------------------------------------------------------------
 
     def start(self, *, seed: int = 0):

@@ -384,6 +384,20 @@ class SimBackend:
         self._reshard: Optional[dict] = None  # one in-flight reshard at a time
         self._join_reshard: Dict[int, Tuple] = {}  # node -> (mode, new_shape)
 
+    def metrics_snapshot(self, now: Optional[float] = None) -> Dict:
+        """Point-in-time counter read across the backend's layers for
+        telemetry scrapes (repro.core.telemetry). Pure read — scraping can
+        never change a ledger byte or perturb the event queue."""
+        sched = self.cluster.scheduler
+        return {
+            "n_active": len(self.cluster.topo.active_nodes()),
+            "degraded": self.degraded,
+            "inflight_scaleouts": sum(1 for fl in self.inflight
+                                      if not fl.aborted),
+            "replication_payload_bytes": sched.replication_payload_bytes,
+            "replication_wire_bytes": sched.replication_wire_bytes,
+        }
+
     # -- engine protocol -----------------------------------------------------
 
     def advance_to(self, t: float, ledger: EventLedger):

@@ -72,20 +72,24 @@ def _clamp(t0: float, t1: float, lo: float, hi: float):
     return (a, b) if b > a else None
 
 
-def ledger_intervals(ledger, *, t_start: float,
-                     t_end: float) -> List[Tuple[float, float, str]]:
-    """Extract labeled candidate BadPut windows from ledger records.
+def ledger_intervals_attributed(
+        ledger, *, t_start: float,
+        t_end: float) -> List[Tuple[float, float, str, int, Tuple]]:
+    """Extract labeled candidate BadPut windows from ledger records, each
+    attributed to the ``(seq, subject)`` of the record that caused it.
 
     Pure read: consumes only fields the engine already writes. Windows may
     overlap freely (e.g. detection inside a leaderless span); the sweep in
-    :func:`classify` resolves overlaps by :data:`PRIORITY`.
+    :func:`classify` resolves overlaps by :data:`PRIORITY`. The attribution
+    is what lets ``repro.core.telemetry`` hang each window under its event's
+    span without re-deriving (and possibly disagreeing about) the timing.
     """
-    out: List[Tuple[float, float, str]] = []
+    out: List[Tuple[float, float, str, int, Tuple]] = []
 
-    def add(t0, t1, cat):
+    def add(t0, t1, cat, seq, subject):
         iv = _clamp(t0, t1, t_start, t_end)
         if iv is not None:
-            out.append((iv[0], iv[1], cat))
+            out.append((iv[0], iv[1], cat, seq, subject))
 
     # Replication rework: for each join, every replanned record opens a
     # rework window that closes at the join's terminal record.
@@ -98,46 +102,56 @@ def ledger_intervals(ledger, *, t_start: float,
             g["replans"].append(r.t)
         elif r.action in ("ready", "aborted"):
             g["end"].append(r.t)
-    for g in joins.values():
+    for (seq, subject), g in joins.items():
         terminal = max(g["end"]) if g["end"] else t_end
         for t_r in g["replans"]:
-            add(t_r, terminal, "replication")
+            add(t_r, terminal, "replication", seq, subject)
 
     for r in ledger:
         d = r.detail
         fault_t = d.get("fault_t")
         detected_t = d.get("detected_t")
         if fault_t is not None and detected_t is not None:
-            add(fault_t, detected_t, "detection")
+            add(fault_t, detected_t, "detection", r.seq, r.subject)
         elif fault_t is not None and r.action in (
                 "fault-undetected", "fault-cleared", "election-no-quorum"):
             # The fault was live (streams stalled, probes burning) until the
             # monitor gave up or other churn mooted it.
-            add(fault_t, r.t, "detection")
+            add(fault_t, r.t, "detection", r.seq, r.subject)
         if r.action == "failover":
             if fault_t is not None:
-                add(fault_t, r.t, "leaderless")
+                add(fault_t, r.t, "leaderless", r.seq, r.subject)
             if detected_t is not None and d.get("election_s") is not None:
-                add(detected_t, detected_t + d["election_s"], "election")
+                add(detected_t, detected_t + d["election_s"], "election",
+                    r.seq, r.subject)
         elif r.action == "election-no-quorum":
             # No quorum anywhere: leaderless from the fault to the give-up,
             # and the frozen cluster stays unproductive to the end.
             if fault_t is not None:
-                add(fault_t, r.t, "leaderless")
-            add(r.t, t_end, "leaderless")
+                add(fault_t, r.t, "leaderless", r.seq, r.subject)
+            add(r.t, t_end, "leaderless", r.seq, r.subject)
         if d.get("blocking_s"):
-            add(r.t, r.t + d["blocking_s"], "handling")
+            add(r.t, r.t + d["blocking_s"], "handling", r.seq, r.subject)
         if r.action == "ready" and d.get("decode_s"):
-            add(r.t - d["decode_s"], r.t, "decode")
+            add(r.t - d["decode_s"], r.t, "decode", r.seq, r.subject)
         if r.action == "ckpt-started":
-            add(r.t, r.t + d.get("snapshot_s", 0.0), "checkpoint")
+            add(r.t, r.t + d.get("snapshot_s", 0.0), "checkpoint",
+                r.seq, r.subject)
         elif r.action == "ckpt-restored":
             if d.get("restore_s"):
-                add(r.t - d["restore_s"], r.t, "checkpoint")
+                add(r.t - d["restore_s"], r.t, "checkpoint", r.seq, r.subject)
             lf, lt = d.get("lost_from"), d.get("lost_to")
             if lf is not None and lt is not None:
-                add(lf, lt, "lost")
+                add(lf, lt, "lost", r.seq, r.subject)
     return out
+
+
+def ledger_intervals(ledger, *, t_start: float,
+                     t_end: float) -> List[Tuple[float, float, str]]:
+    """Labeled candidate BadPut windows — the attribution-free projection of
+    :func:`ledger_intervals_attributed` (identical windows, same order)."""
+    return [(a, b, cat) for a, b, cat, _seq, _subject in
+            ledger_intervals_attributed(ledger, t_start=t_start, t_end=t_end)]
 
 
 def classify(intervals: List[Tuple[float, float, str]], *, t_start: float,

@@ -774,6 +774,29 @@ class ClusterMonitor:
         std = max(std, PHI_MIN_STD_FRACTION * self.heartbeat_period, 1e-6)
         return phi_score(now - st.last, mean, std)
 
+    def metrics_snapshot(self, now: Optional[float] = None) -> Dict:
+        """Point-in-time read of the detector's observables for telemetry
+        scrapes: per-node phi suspicion, current (adaptively scaled) sweep
+        periods, piggyback savings, and pending-fault table sizes. Pure
+        read — shares :meth:`suspicion`'s code path and touches nothing."""
+        now = self.sim.now if now is None else float(now)
+        return {
+            "control_datagrams": self.control_datagrams,
+            "piggybacked_probes": self.piggybacked_probes,
+            "piggybacked_heartbeats": self.piggybacked_heartbeats,
+            "heartbeat_period_s": self._hb_interval,
+            "probe_period_s": self.probe_period * self._probe_scale,
+            "phi_threshold": self.phi_threshold,
+            "sweeps_on": self.sweeps_on,
+            "suspicion": {n: self.suspicion(n, now=now)
+                          for n in sorted(self._hb_stats)},
+            "pending_faults": {
+                "node": len(self._node_faults),
+                "link": len(self._link_faults),
+                "loss": len(self._link_loss),
+            },
+        }
+
     def check_heartbeats(self) -> List[int]:
         """Returns nodes the detector now declares dead; triggers callbacks.
 

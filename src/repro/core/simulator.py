@@ -277,6 +277,20 @@ class Network:
         self.sim.at(t, deliver, daemon=daemon)
         return handle
 
+    def metrics_snapshot(self, now: Optional[float] = None) -> Dict:
+        """Point-in-time counter read for telemetry scrapes. Pure read —
+        never touches the event queue or any transfer state."""
+        now = self.sim.now if now is None else float(now)
+        backlogs = [max(0.0, free - now) for free in self._link_free.values()]
+        return {
+            "data_wire_bytes": self.data_wire_bytes,
+            "control_wire_bytes": self.control_wire_bytes,
+            "control_messages": self.control_messages,
+            "bytes_on_wire": self.bytes_on_wire,
+            "queue_backlog_s": math.fsum(b for b in backlogs if b > 0.0),
+            "queued_links": sum(1 for b in backlogs if b > 0.0),
+        }
+
     def control(self, u: int, v: int, on_done: Callable[[], None],
                 payload_bytes: float = CONTROL_MSG_BYTES):
         """Control message over the direct link (or shortest route)."""

@@ -483,6 +483,17 @@ class ElasticTrainer:
                                             policy=policy))
         return engine.run(events)
 
+    def metrics_snapshot(self) -> dict:
+        """Point-in-time read of training observables for telemetry scrapes
+        (repro.core.telemetry). Pure read; wall-clock step times stay raw —
+        histogram bucketing is the registry's job."""
+        return {
+            "n_active": len(self.active),
+            "step_count": self.step_count,
+            "step_times": {n: list(ts) for n, ts in
+                           sorted(self._step_times.items())},
+        }
+
     # -- stragglers ------------------------------------------------------------------
 
     def straggler_report(self, threshold: float = 2.0) -> dict:
@@ -575,6 +586,16 @@ class TrainerBackend:
             return
         for _ in range(self.steps_between):
             self.trainer.step(self.batch_fn())
+
+    def metrics_snapshot(self) -> Dict:
+        """Backend-level telemetry snapshot, mirroring
+        ``SimBackend.metrics_snapshot``'s shape where both substrates have
+        the observable. Pure read."""
+        return {
+            "n_active": len(self.trainer.active),
+            "degraded": self.degraded,
+            "members": sorted(self._members, key=str),
+        }
 
     def coordinator_device(self):
         """The device currently playing scheduler: the explicitly installed

@@ -1,0 +1,319 @@
+"""Causal span tracing + metrics exposition (the observability PR's suite).
+
+Four contracts:
+
+1. **Well-formedness** — on every scenario generator family, the stitched
+   span forest validates clean: every ``*-started`` record reaches exactly
+   one terminal, children sit inside parents, same-name siblings never
+   overlap; and the forest's own BadPut windows classify to *exactly* the
+   GoodputReport's components (`fsum`-level equality, same code path).
+2. **Determinism** — same seed ⇒ byte-identical span digest and
+   byte-identical ``metrics.prom`` exposition.
+3. **Inertness** — telemetry is a pure post-hoc read: running the full
+   pipeline (spans, Chrome trace, metrics) against the pinned omniscient
+   poisson replay leaves the ledger digest at the pre-reshard constant.
+4. **Cross-substrate parity** — the simulator and a TrainerBackend replay
+   of one ``mixed_faults`` trace reach the same span digest.
+"""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.core import SimCluster, random_edge_topology
+from repro.core.engine import (
+    ChurnEngine,
+    EventLedger,
+    SimBackend,
+    run_trace_goodput,
+    run_trace_sim,
+)
+from repro.core.goodput import goodput_report
+from repro.core.telemetry import (
+    DETECTION_BUCKETS,
+    TTR_BUCKETS,
+    Counter,
+    Histogram,
+    MetricsRegistry,
+    build_spans,
+    collect_backend,
+    detection_rows,
+    markdown_report,
+    span_digest,
+    trace_events,
+    ttr_rows,
+    validate,
+    validate_trace_events,
+    write_chrome_trace,
+)
+from repro.scenarios import (
+    adversarial_churn,
+    checkpointed_training,
+    detector_stress,
+    mixed_faults,
+    poisson_churn,
+    reshard_churn,
+    scheduler_churn,
+)
+
+from test_resharding import MB, PRE_RESHARD_DIGEST, _poisson_cluster_and_trace
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def _cluster(n=10, seed=3):
+    cl = SimCluster(random_edge_topology(n, seed=seed),
+                    state_bytes=16 * MB, tensor_sizes=[MB] * 16)
+    cl.train(1)
+    return cl
+
+
+def _scenarios():
+    """One (name, trace, engine kwargs) per generator family the issue
+    names; sized small enough for tier-1."""
+    topo = random_edge_topology(10, seed=3)
+    nodes = sorted(topo.active_nodes())
+    return [
+        ("poisson", poisson_churn(nodes, seed=7, horizon_s=120.0,
+                                  rate_join=0.05, rate_leave=0.04), {}),
+        ("adversarial", adversarial_churn(nodes, seed=7, horizon_s=90.0,
+                                          n_joins=4), {}),
+        ("detector_stress", detector_stress(topo, seed=7, horizon_s=60.0),
+         {}),
+        ("scheduler_churn", scheduler_churn(topo, seed=7, horizon_s=60.0),
+         {}),
+        ("reshard_churn", reshard_churn(nodes, seed=4, n_failures=3,
+                                        n_joins=1),
+         {"reshard": "auto"}),
+        ("mixed_faults", mixed_faults(topo, seed=5, horizon_s=90.0), {}),
+        ("checkpointed", checkpointed_training(nodes, seed=7,
+                                               horizon_s=80.0),
+         {"checkpoint": "adaptive", "policy": "fixed-checkpoint"}),
+    ]
+
+
+def _replay(trace, **kw):
+    cl = _cluster()
+    return run_trace_goodput(cl, list(trace), **kw)
+
+
+@pytest.mark.parametrize("name,trace,kw",
+                         _scenarios(), ids=lambda v: v if isinstance(v, str)
+                         else "")
+def test_span_wellformedness_and_conservation(name, trace, kw):
+    ledger, _, report = _replay(trace, **kw)
+    forest = build_spans(ledger, t_start=report.t_start, t_end=report.t_end)
+    assert validate(ledger, forest) == []
+    # The forest's own windows classify to exactly the accounting's
+    # components — same classifier, same fsum order, bit-equal.
+    assert forest.badput_components() == report.components
+    # Exported trace passes the trace_event schema audit.
+    assert validate_trace_events(trace_events(forest)) == []
+
+
+@pytest.mark.parametrize("name,trace,kw",
+                         _scenarios(), ids=lambda v: v if isinstance(v, str)
+                         else "")
+def test_same_seed_span_digest_byte_identity(name, trace, kw):
+    d1 = span_digest(_replay(trace, **kw)[0])
+    d2 = span_digest(_replay(trace, **kw)[0])
+    assert d1 == d2
+
+
+def test_pinned_poisson_digest_inert_under_full_telemetry(tmp_path):
+    """Running the entire telemetry pipeline — accounting, span forest,
+    Chrome trace export, metrics scrape, markdown report — against the
+    seeded omniscient poisson replay leaves the ledger at the pre-reshard
+    pinned digest. Telemetry cannot change a ledger byte."""
+    cl, trace = _poisson_cluster_and_trace()
+    backend = SimBackend(cl, accounting=True)
+    ledger = ChurnEngine(backend).run(list(trace))
+    assert ledger.digest() == PRE_RESHARD_DIGEST
+    report = backend.goodput
+    forest = build_spans(ledger, t_start=report.t_start, t_end=report.t_end)
+    assert validate(ledger, forest) == []
+    write_chrome_trace(tmp_path / "chaos-trace.json", forest)
+    reg = MetricsRegistry()
+    collect_backend(reg, backend, ledger, report=report)
+    (tmp_path / "metrics.prom").write_text(reg.exposition())
+    markdown_report(ledger, forest, report=report)
+    span_digest(ledger, forest)
+    assert ledger.digest() == PRE_RESHARD_DIGEST
+    # And a plain replay (telemetry never constructed) agrees.
+    cl2, trace2 = _poisson_cluster_and_trace()
+    ledger2, _ = run_trace_sim(cl2, trace2)
+    assert ledger2.digest() == PRE_RESHARD_DIGEST
+
+
+def test_metrics_prom_byte_stable_and_has_ttr_histograms():
+    topo = random_edge_topology(10, seed=3)
+    trace = mixed_faults(topo, seed=5, horizon_s=90.0)
+
+    def scrape():
+        cl = _cluster()
+        backend = SimBackend(cl, accounting=True)
+        ledger = ChurnEngine(backend).run(list(trace))
+        reg = MetricsRegistry()
+        collect_backend(reg, backend, ledger, report=backend.goodput)
+        return reg.exposition()
+
+    prom1, prom2 = scrape(), scrape()
+    assert prom1 == prom2  # byte-stable across same-seed replays
+    assert "# TYPE chaos_engine_ttr_seconds histogram" in prom1
+    assert 'chaos_engine_ttr_seconds_bucket{fault_class="node-failure"' \
+        in prom1
+    assert 'fault_class="scheduler-failure"' in prom1
+    assert "chaos_monitor_detection_latency_seconds_bucket" in prom1
+    # Exposition is sorted by family name — no dict-order dependence.
+    families = [ln.split()[2] for ln in prom1.splitlines()
+                if ln.startswith("# TYPE")]
+    assert families == sorted(families)
+
+
+def test_histogram_buckets_cumulative_and_deterministic():
+    h = Histogram("t_seconds", "", ("cls",), buckets=(1.0, 0.1, 10.0))
+    assert h.edges == (0.1, 1.0, 10.0)  # sorted regardless of input order
+    for v in (0.05, 0.5, 0.5, 5.0, 50.0):
+        h.observe(v, cls="x")
+    lines = h.expose()
+    assert lines == [
+        't_seconds_bucket{cls="x",le="0.1"} 1',
+        't_seconds_bucket{cls="x",le="1"} 3',
+        't_seconds_bucket{cls="x",le="10"} 4',
+        't_seconds_bucket{cls="x",le="+Inf"} 5',
+        't_seconds_sum{cls="x"} 56.05',
+        't_seconds_count{cls="x"} 5',
+    ]
+
+
+def test_registry_order_independent_and_validating():
+    def fill(pairs):
+        reg = MetricsRegistry()
+        for name, labels in pairs:
+            reg.counter(name, "h", ("k",)).inc(1.0, k=labels)
+        return reg.exposition()
+
+    a = fill([("m_b", "x"), ("m_a", "y"), ("m_b", "a")])
+    b = fill([("m_a", "y"), ("m_b", "a"), ("m_b", "x")])
+    assert a == b
+    with pytest.raises(ValueError):
+        Counter("0bad name")
+    with pytest.raises(ValueError):
+        Counter("ok", label_names=("bad-label",))
+    with pytest.raises(ValueError):
+        Counter("c").inc(-1.0)
+    reg = MetricsRegistry()
+    reg.counter("m", "h", ("k",))
+    with pytest.raises(ValueError):
+        reg.gauge("m", "h", ("k",))  # type change rejected
+    with pytest.raises(ValueError):
+        reg.counter("m", "h", ("other",))  # label change rejected
+
+
+def test_unclosed_started_records_are_flagged():
+    led = EventLedger()
+    led.append(0, 1.0, "join", 100, "scale-out-started", {})
+    v = validate(led)
+    assert any("join" in x and "1 started, 0 terminal" in x for x in v)
+    led.append(0, 2.0, "join", 100, "ready", {})
+    assert validate(led) == []
+    led.append(1, 3.0, "reshard", 5, "reshard-started",
+               {"old_shape": (4, 1), "new_shape": (2, 2), "moved_bytes": 0,
+                "step_s": 1.0, "baseline_step_s": 1.0})
+    assert any("reshard" in x for x in validate(led))
+    led.append(2, 4.0, "node-fault", 7, "fault-injected", {})
+    v = validate(led)
+    assert any("fault seq=2" in x for x in v)
+
+
+def test_trace_event_schema_negatives():
+    assert validate_trace_events(
+        [{"ph": "Z", "name": "x"}]) != []
+    assert any("flow id" in v for v in validate_trace_events(
+        [{"ph": "s", "name": "f", "pid": 1, "tid": 1, "ts": 0, "id": 9}]))
+    bad_ts = validate_trace_events(
+        [{"ph": "X", "name": "x", "pid": 1, "tid": 1, "ts": -5, "dur": 1}])
+    assert any("bad ts" in v for v in bad_ts)
+
+
+def test_chrome_trace_export_loadable_shape(tmp_path):
+    topo = random_edge_topology(10, seed=3)
+    trace = mixed_faults(topo, seed=5, horizon_s=90.0)
+    ledger, _, report = _replay(trace)
+    forest = build_spans(ledger, t_start=report.t_start, t_end=report.t_end)
+    path = write_chrome_trace(tmp_path / "chaos-trace.json", forest)
+    data = json.loads(Path(path).read_text())
+    evs = data["traceEvents"]
+    assert {e["ph"] for e in evs} >= {"X", "M"}
+    procs = {e["args"]["name"] for e in evs
+             if e["ph"] == "M" and e["name"] == "process_name"}
+    assert procs == {"control-plane", "nodes", "links"}
+    # Byte-determinism of the artifact itself.
+    blob1 = Path(path).read_text()
+    write_chrome_trace(tmp_path / "again.json", forest)
+    assert (tmp_path / "again.json").read_text() == blob1
+
+
+def test_cross_substrate_span_digest_parity():
+    """One mixed_faults trace, two substrates, one span digest: the
+    simulator's detection-driven replay and the TrainerBackend's
+    event-boundary replay collapse to the same (seq, kind, subject, fate)
+    stream."""
+    sys.path.insert(0, str(ROOT))
+    from tools.trace_report import _MembershipTrainer
+    from repro.elastic.trainer import TrainerBackend
+
+    topo = random_edge_topology(12, seed=1)
+    trace = mixed_faults(topo, seed=5, horizon_s=120.0)
+    cl = SimCluster(topo, state_bytes=32 * MB, tensor_sizes=[MB] * 32)
+    cl.train(1)
+    sim_ledger, _ = run_trace_sim(cl, list(trace))
+
+    tr = _MembershipTrainer(sorted(random_edge_topology(12, seed=1)
+                                   .active_nodes()))
+    backend = TrainerBackend(tr, min_active=2, state_bytes=32 * MB,
+                             tensor_sizes=[MB] * 32)
+    tr_ledger = ChurnEngine(backend).run(list(trace))
+
+    assert span_digest(sim_ledger) == span_digest(tr_ledger)
+    # The raw ledgers genuinely differ (virtual times, detection detail) —
+    # parity is the projection's work, not an artifact of equal inputs.
+    assert sim_ledger.canonical_bytes() != tr_ledger.canonical_bytes()
+
+
+def test_trace_report_cli_smoke(tmp_path):
+    sys.path.insert(0, str(ROOT))
+    from tools.trace_report import main
+
+    assert main(["--smoke", "--out", str(tmp_path)]) == 0
+    assert (tmp_path / "chaos-trace.json").exists()
+    prom = (tmp_path / "metrics.prom").read_text()
+    assert "chaos_engine_ttr_seconds_bucket" in prom
+    assert (tmp_path / "report.md").read_text().startswith("# Chaos trace")
+
+
+def test_detection_rows_single_source_of_truth():
+    """benchmarks.common.detection_rows IS the telemetry implementation,
+    and the span forest carries the same rows."""
+    sys.path.insert(0, str(ROOT))
+    from benchmarks import common
+
+    assert common.detection_rows is detection_rows
+    topo = random_edge_topology(10, seed=3)
+    trace = mixed_faults(topo, seed=5, horizon_s=90.0)
+    ledger, _, report = _replay(trace)
+    forest = build_spans(ledger, t_start=report.t_start, t_end=report.t_end)
+    assert forest.rows == detection_rows(ledger)
+    rows = ttr_rows(ledger)
+    assert rows and all(r["ttr_s"] >= 0 for r in rows)
+    assert {r["fault_class"] for r in rows} <= {
+        "node-failure", "link-failure", "scheduler-failure"}
+
+
+def test_bucket_edges_are_pinned():
+    """Bucket edges are constants, never derived from observed data — the
+    byte-stability of metrics.prom rests on this."""
+    assert TTR_BUCKETS == tuple(sorted(TTR_BUCKETS))
+    assert DETECTION_BUCKETS == tuple(sorted(DETECTION_BUCKETS))
+    assert TTR_BUCKETS[0] == 0.01 and TTR_BUCKETS[-1] == 300.0

@@ -1,0 +1,255 @@
+#!/usr/bin/env python
+"""Replay a churn trace and emit the observability artifacts.
+
+Outputs (default ``benchmarks/results/trace_report/``):
+
+* ``chaos-trace.json`` — Chrome ``trace_event`` JSON on the virtual clock
+  (open it at ``ui.perfetto.dev`` or ``chrome://tracing``);
+* ``metrics.prom`` — Prometheus text exposition of the run's counters,
+  gauges, and per-fault-class TTR histograms (byte-stable per seed);
+* ``report.md`` — markdown timeline + TTR/GoodPut summary.
+
+``--assert-inert`` proves the telemetry-is-inert invariant on this trace:
+the ledger digest with telemetry enabled equals a plain replay's, a second
+telemetry replay reproduces ``metrics.prom`` byte-for-byte, and the span
+digest is stable. ``--parity`` additionally replays the same trace through
+a (membership-only) :class:`~repro.elastic.trainer.TrainerBackend` and
+asserts span-digest equality across the substrates. ``--expect-digest``
+pins the replay against a known ledger digest (CI uses the pre-reshard
+omniscient poisson digest from ``tests/test_resharding.py``).
+
+Usage::
+
+    PYTHONPATH=src python tools/trace_report.py --smoke
+    PYTHONPATH=src python tools/trace_report.py \
+        --generator mixed-faults --seed 5 --horizon 120 --parity
+    PYTHONPATH=src python tools/trace_report.py --trace my_trace.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+if str(ROOT / "src") not in sys.path:
+    sys.path.insert(0, str(ROOT / "src"))
+
+from repro.core.engine import ChurnEngine, SimBackend  # noqa: E402
+from repro.core.goodput import goodput_report  # noqa: E402
+from repro.core.negotiation import SimCluster  # noqa: E402
+from repro.core.telemetry import (  # noqa: E402
+    MetricsRegistry,
+    build_spans,
+    collect_backend,
+    collect_trainer_backend,
+    markdown_report,
+    span_digest,
+    trace_events,
+    validate,
+    validate_trace_events,
+    write_chrome_trace,
+)
+from repro.core.topology import random_edge_topology  # noqa: E402
+from repro.scenarios.generators import (  # noqa: E402
+    mixed_faults,
+    poisson_churn,
+)
+from repro.scenarios.trace import ScenarioTrace  # noqa: E402
+
+MB = 1 << 20
+DEFAULT_OUT = ROOT / "benchmarks" / "results" / "trace_report"
+
+
+def _build_cluster(args):
+    topo = random_edge_topology(args.nodes, seed=args.topo_seed)
+    cl = SimCluster(topo, state_bytes=args.state_mb * MB,
+                    tensor_sizes=[MB] * args.state_mb)
+    cl.train(1)
+    return topo, cl
+
+
+def _build_trace(args, topo):
+    if args.trace:
+        return ScenarioTrace.load(args.trace)
+    if args.generator == "mixed-faults":
+        return mixed_faults(topo, seed=args.seed, horizon_s=args.horizon,
+                            n_joins=args.joins)
+    if args.generator == "poisson-churn":
+        return poisson_churn(sorted(topo.active_nodes()), seed=args.seed,
+                             horizon_s=args.horizon,
+                             rate_join=0.05, rate_leave=0.04)
+    raise SystemExit(f"unknown generator {args.generator!r} "
+                     f"(use --trace for other scenarios)")
+
+
+def _sim_replay(args, *, telemetry: bool):
+    """One fresh replay of the configured trace. With ``telemetry`` the
+    backend is scraped and the span forest built — the inertness check
+    compares this replay's ledger digest against a plain one's."""
+    topo, cl = _build_cluster(args)
+    trace = _build_trace(args, topo)
+    backend = SimBackend(cl, min_active=2, policy=args.policy,
+                         accounting=True)
+    ledger = ChurnEngine(backend).run(list(trace))
+    if not telemetry:
+        return ledger.digest(), None, None, None
+    report = backend.goodput
+    forest = build_spans(ledger, t_start=report.t_start, t_end=report.t_end)
+    reg = MetricsRegistry()
+    collect_backend(reg, backend, ledger, report=report)
+    return ledger.digest(), ledger, forest, reg
+
+
+class _Dev:
+    def __init__(self, i):
+        self.id = i
+
+
+class _MembershipTrainer:
+    """Membership-only ElasticTrainer double (the established test idiom):
+    enough surface for TrainerBackend's event handling without jax arrays.
+    ``spare`` free pool devices let trace joins complete."""
+
+    def __init__(self, node_ids, spare=4):
+        top = max(node_ids) + 1 if node_ids else 0
+        self.pool = [_Dev(i) for i in node_ids] + \
+            [_Dev(top + k) for k in range(spare)]
+        self.active = [d for d in self.pool if d.id in set(node_ids)]
+        self.step_count = 0
+
+    def scale_in(self, device, failure=False):
+        self.active.remove(device)
+        return type("E", (), {"step": self.step_count})()
+
+    def scale_out(self, device, codec=None):
+        self.active.append(device)
+        return type("E", (), {
+            "step": self.step_count,
+            "plan_summary": {"n_shards": len(self.active), "shard_size": 0},
+        })()
+
+    def apply_reshard(self, tp, microbatch=1):
+        return type("E", (), {"step": self.step_count})()
+
+    def apply_link_event(self, kind, device_ids, **kw):
+        pass
+
+
+def _trainer_replay(args):
+    """Replay the same trace through TrainerBackend; returns its span
+    digest (times differ by construction — the digest must not)."""
+    from repro.elastic.trainer import TrainerBackend
+
+    topo, _cl = _build_cluster(args)
+    trace = _build_trace(args, topo)
+    tr = _MembershipTrainer(sorted(topo.active_nodes()))
+    backend = TrainerBackend(tr, min_active=2, policy=args.policy,
+                             state_bytes=args.state_mb * MB,
+                             tensor_sizes=[MB] * args.state_mb)
+    ledger = ChurnEngine(backend).run(list(trace))
+    t_end = max((r.t for r in ledger), default=0.0)
+    report = goodput_report(ledger, t_start=0.0, t_end=t_end)
+    forest = build_spans(ledger, t_start=0.0, t_end=t_end)
+    reg = MetricsRegistry()
+    collect_trainer_backend(reg, backend, ledger, report=report)
+    return span_digest(ledger, forest), reg.exposition()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--generator", default="mixed-faults",
+                    choices=["mixed-faults", "poisson-churn"])
+    ap.add_argument("--trace", default=None,
+                    help="replay a saved ScenarioTrace JSONL instead")
+    ap.add_argument("--seed", type=int, default=5)
+    ap.add_argument("--topo-seed", type=int, default=1)
+    ap.add_argument("--nodes", type=int, default=12)
+    ap.add_argument("--horizon", type=float, default=120.0)
+    ap.add_argument("--joins", type=int, default=2)
+    ap.add_argument("--state-mb", type=int, default=32)
+    ap.add_argument("--policy", default="fixed")
+    ap.add_argument("--out", type=pathlib.Path, default=DEFAULT_OUT)
+    ap.add_argument("--assert-inert", action="store_true",
+                    help="prove digest-inertness + metrics byte-stability")
+    ap.add_argument("--parity", action="store_true",
+                    help="assert sim/trainer span-digest parity")
+    ap.add_argument("--expect-digest", default=None,
+                    help="fail unless the replay's ledger digest equals this")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: --assert-inert --parity + schema checks")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.assert_inert = True
+        args.parity = True
+
+    digest, ledger, forest, reg = _sim_replay(args, telemetry=True)
+    print(f"replayed {len(list(ledger))} ledger records; "
+          f"ledger digest {digest[:16]}…")
+    if args.expect_digest and digest != args.expect_digest:
+        print(f"FAIL: ledger digest {digest} != expected "
+              f"{args.expect_digest}")
+        return 1
+
+    violations = validate(ledger, forest)
+    if violations:
+        for v in violations:
+            print(f"  span violation: {v}")
+        return 1
+    report = goodput_report(ledger, t_start=forest.t_start,
+                            t_end=forest.t_end)
+    if forest.badput_components() != report.components:
+        print("FAIL: span intervals do not conserve against GoodputReport")
+        return 1
+    sdigest = span_digest(ledger, forest)
+    print(f"span forest: {len(forest.roots)} roots, "
+          f"{len(forest.flows)} flows, 0 violations; "
+          f"span digest {sdigest[:16]}…")
+
+    events = trace_events(forest)
+    schema = validate_trace_events(events)
+    if schema:
+        for v in schema:
+            print(f"  trace_event violation: {v}")
+        return 1
+
+    args.out.mkdir(parents=True, exist_ok=True)
+    trace_path = write_chrome_trace(
+        args.out / "chaos-trace.json", forest,
+        metadata={"generator": args.generator, "seed": args.seed,
+                  "ledger_digest": digest, "span_digest": sdigest})
+    prom = reg.exposition()
+    (args.out / "metrics.prom").write_text(prom)
+    (args.out / "report.md").write_text(markdown_report(
+        ledger, forest, report=report,
+        title=f"Chaos trace report — {args.generator} seed={args.seed}"))
+    print(f"wrote {trace_path}, metrics.prom ({len(prom)} bytes), report.md")
+
+    if args.assert_inert:
+        plain_digest, _, _, _ = _sim_replay(args, telemetry=False)
+        if plain_digest != digest:
+            print(f"FAIL: telemetry changed the ledger "
+                  f"({plain_digest} != {digest})")
+            return 1
+        digest2, ledger2, forest2, reg2 = _sim_replay(args, telemetry=True)
+        if reg2.exposition() != prom:
+            print("FAIL: metrics.prom not byte-stable across replays")
+            return 1
+        if span_digest(ledger2, forest2) != sdigest:
+            print("FAIL: span digest not stable across replays")
+            return 1
+        print("inertness: telemetry replay is ledger-byte-identical; "
+              "metrics.prom and span digest byte-stable")
+
+    if args.parity:
+        tr_digest, _tr_prom = _trainer_replay(args)
+        if tr_digest != sdigest:
+            print(f"FAIL: trainer span digest {tr_digest} != simulator "
+                  f"{sdigest}")
+            return 1
+        print("parity: TrainerBackend replay reaches the same span digest")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
